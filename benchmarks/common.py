@@ -1,0 +1,61 @@
+"""Shared benchmark plumbing: Row records, CSV output, validation asserts."""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.power_model import A100, ServerPower  # noqa: E402
+from repro.core.traces import build_workload_classes  # noqa: E402
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float  # wall time of the measured unit (us)
+    derived: str  # the figure's headline quantity
+    ok: Optional[bool] = None  # paper-claim validation (None = informational)
+
+    def csv(self) -> str:
+        flag = "" if self.ok is None else (",PASS" if self.ok else ",FAIL")
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}{flag}"
+
+
+class Bench:
+    """Context helper: times the block, collects rows."""
+
+    def __init__(self):
+        self.rows: List[Row] = []
+
+    def add(self, name: str, derived: str, t_us: float = 0.0, ok=None):
+        self.rows.append(Row(name, t_us, derived, ok))
+
+    def timed(self, name: str, fn: Callable, derived_fn: Callable = None, ok_fn=None):
+        t0 = time.perf_counter()
+        out = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        derived = derived_fn(out) if derived_fn else str(out)
+        ok = ok_fn(out) if ok_fn else None
+        self.rows.append(Row(name, us, derived, ok))
+        return out
+
+
+SERVER = ServerPower(A100)
+_WLS = None
+
+
+def bloom_workloads():
+    global _WLS
+    if _WLS is None:
+        _WLS = build_workload_classes("bloom-176b", SERVER)
+    return _WLS
+
+
+# standard row-scale parameters (paper Table 1)
+N_PROVISIONED = 40
+WEEK = 7 * 86400.0

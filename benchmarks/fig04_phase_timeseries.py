@@ -1,0 +1,41 @@
+"""Fig. 4: per-inference power phases — spiky compute-bound prompt, long flat
+memory-bound token phase — for the paper's four inference models."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Bench, SERVER
+from repro.configs import get_config
+from repro.core.workload import request_timing
+
+MODELS = ["gpt-neox-20b", "opt-30b", "bloom-176b", "flan-t5-xxl"]
+TDP = SERVER.device.tdp_w
+
+
+def run(quick: bool = False) -> Bench:
+    b = Bench()
+    for name in MODELS:
+        cfg = get_config(name)
+        t0 = time.perf_counter()
+        t = request_timing(cfg, prompt=2048, batch=1, server=SERVER)
+        us = (time.perf_counter() - t0) * 1e6
+        p_prompt = (t.prefill_point.power_at(SERVER, 1.0) - SERVER.other_w) / SERVER.n_devices
+        p_token = (t.token_point.power_at(SERVER, 1.0) - SERVER.other_w) / SERVER.n_devices
+        # paper: prompt spikes at/above TDP (large models), token ~0.4-0.6 TDP,
+        # prompt lasts <~1s, token phase much longer
+        big = cfg.total_params() > 1e10
+        ok = (p_token / TDP < 0.72
+              and (p_prompt / TDP > 0.85 if big else p_prompt / TDP > 0.4)
+              and (t.t_prefill < 3.0)
+              and 256 * t.t_token > t.t_prefill)
+        b.add(f"fig04/{name}",
+              f"prompt={p_prompt/TDP:.2f}xTDP/{t.t_prefill*1e3:.0f}ms "
+              f"token={p_token/TDP:.2f}xTDP/{t.t_token*1e3:.1f}ms_per_tok",
+              us, ok)
+    return b
+
+
+if __name__ == "__main__":
+    for r in run().rows:
+        print(r.csv())

@@ -1,0 +1,79 @@
+"""Fig. 5: power (mean, peak) and latency sensitivity to input size, batch
+size and output size for inference (BLOOM-176B, GPT-NeoX-20B)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, SERVER
+from repro.configs import get_config
+from repro.core.workload import request_timing
+
+TDP = SERVER.device.tdp_w
+
+
+def _gpu(p):
+    return (p - SERVER.other_w) / SERVER.n_devices / TDP
+
+
+def run(quick: bool = False) -> Bench:
+    b = Bench()
+    models = ["bloom-176b"] if quick else ["bloom-176b", "gpt-neox-20b"]
+    for name in models:
+        cfg = get_config(name)
+        t0 = time.perf_counter()
+
+        # (a,b) input sweep at batch 1, output 128
+        inputs = [256, 1024, 4096, 8192]
+        peaks, lats = [], []
+        for inp in inputs:
+            t = request_timing(cfg, inp, 1, SERVER)
+            peaks.append(_gpu(t.prefill_point.power_at(SERVER, 1.0)))
+            lats.append(t.latency(128, SERVER.device))
+        # peak rises with input, or the model is already saturated at/above
+        # TDP for every input size (BLOOM's regime in the paper's Fig 5a)
+        ok_a = (all(x <= y + 1e-9 for x, y in zip(peaks, peaks[1:]))
+                or min(peaks) >= 0.95)
+        ok_b = (lats[2] - lats[0]) / lats[0] < 0.35  # ~flat latency till 4k
+        b.add(f"fig05a/{name}/input_sweep",
+              "peak_xTDP=" + "/".join(f"{p:.2f}" for p in peaks), 0.0, ok_a)
+        b.add(f"fig05b/{name}/latency_vs_input",
+              "lat_s=" + "/".join(f"{l:.2f}" for l in lats), 0.0, ok_b)
+
+        # (c,d) batch sweep at input 256 (unsaturated prompt: peak still rising)
+        batches = [1, 4, 16]
+        bpk, bmean, blat = [], [], []
+        for bs in batches:
+            t = request_timing(cfg, 256, bs, SERVER)
+            bpk.append(_gpu(t.prefill_point.power_at(SERVER, 1.0)))
+            bmean.append(_gpu(t.token_point.power_at(SERVER, 1.0)))
+            blat.append(t.latency(128, SERVER.device))
+        ok_c = ((bpk[-1] >= bpk[0] - 0.02 or min(bpk) >= 0.95)
+                and bmean[-1] >= bmean[0] - 1e-9)
+        b.add(f"fig05c/{name}/batch_sweep",
+              "peak=" + "/".join(f"{p:.2f}" for p in bpk)
+              + " mean=" + "/".join(f"{p:.2f}" for p in bmean), 0.0, ok_c)
+        b.add(f"fig05d/{name}/latency_vs_batch",
+              "lat_s=" + "/".join(f"{l:.2f}" for l in blat), 0.0,
+              blat[-1] >= blat[0] - 1e-9)
+
+        # (e,f) output sweep: power flat, latency linear
+        outs = [128, 512, 2048]
+        t = request_timing(cfg, 2048, 1, SERVER)
+        olat = [t.latency(o, SERVER.device) for o in outs]
+        lin = np.polyfit(outs, olat, 1)
+        resid = np.max(np.abs(np.polyval(lin, outs) - olat) / np.asarray(olat))
+        b.add(f"fig05e/{name}/power_vs_output",
+              f"peak_const={_gpu(t.prefill_point.power_at(SERVER,1.0)):.2f}xTDP", 0.0, True)
+        b.add(f"fig05f/{name}/latency_vs_output",
+              "lat_s=" + "/".join(f"{l:.1f}" for l in olat)
+              + f" linear_resid={resid:.1e}", (time.perf_counter() - t0) * 1e6,
+              resid < 1e-6)
+    return b
+
+
+if __name__ == "__main__":
+    for r in run().rows:
+        print(r.csv())

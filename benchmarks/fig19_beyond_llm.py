@@ -1,0 +1,41 @@
+"""Fig. 19 (§7): power-oversubscription insights beyond text LLMs — vision and
+audio/multimodal models (our assigned internvl2-1b VLM + whisper-base) show
+flatter phase contrast but the same superlinear frequency-scaling response."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Bench, SERVER
+from repro.configs import get_config
+from repro.core.workload import request_timing
+
+TDP = SERVER.device.tdp_w
+
+
+def run(quick: bool = False) -> Bench:
+    b = Bench()
+    llm = request_timing(get_config("bloom-176b"), 2048, 1, SERVER)
+    llm_contrast = (llm.prefill_point.power_at(SERVER, 1.0)
+                    / llm.token_point.power_at(SERVER, 1.0))
+    for name, prompt, batch in [("internvl2-1b", 1024, 8), ("whisper-base", 3000, 8)]:
+        cfg = get_config(name)
+        t0 = time.perf_counter()
+        t = request_timing(cfg, prompt, batch, SERVER)
+        us = (time.perf_counter() - t0) * 1e6
+        contrast = (t.prefill_point.power_at(SERVER, 1.0)
+                    / t.token_point.power_at(SERVER, 1.0))
+        f = 1275 / 1410
+        p_red = 1 - t.prefill_point.power_at(SERVER, f) / t.prefill_point.power_at(SERVER, 1.0)
+        perf = t.latency(64, SERVER.device, f, f) / t.latency(64, SERVER.device) - 1
+        ok = p_red > perf  # superlinear response transfers (contrast informational)
+        b.add(f"fig19/{name}",
+              f"phase_contrast={contrast:.2f} (LLM {llm_contrast:.2f}) "
+              f"freq_cap: dP={p_red:.1%} dT={perf:.1%} superlinear={p_red > perf}",
+              us, ok)
+    return b
+
+
+if __name__ == "__main__":
+    for r in run().rows:
+        print(r.csv())

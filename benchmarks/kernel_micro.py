@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks: XLA attention path step time on this host (CPU) and
+interpret-mode kernel validation timing. Wall numbers are host-dependent; the
+derived column carries the correctness deltas vs ref (the portable result)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Bench
+from repro.kernels import ops, ref
+
+
+def _bench(fn, *args, n=3, **kw):
+    fn(*args, **kw).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    out.block_until_ready()
+    return out, (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick: bool = False) -> Bench:
+    b = Bench()
+    key = jax.random.key(0)
+    B, S, H, KV, hd = 1, 512, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.bfloat16)
+
+    out, us = _bench(ops.flash_attention, q, k, v, causal=True, interpret=True)
+    want = ref.mha_reference(q, k, v, causal=True)
+    err = float(np.max(np.abs(np.float32(out) - np.float32(want))))
+    b.add("kernel/flash_attention_interpret", f"max_err_vs_ref={err:.1e}", us, err < 3e-2)
+
+    qd = jax.random.normal(ks[0], (4, H, hd), jnp.bfloat16)
+    kd = jax.random.normal(ks[1], (4, 2048, KV, hd), jnp.bfloat16)
+    vd = jax.random.normal(ks[2], (4, 2048, KV, hd), jnp.bfloat16)
+    out, us = _bench(ops.decode_attention, qd, kd, vd, 1500, interpret=True)
+    want = ref.decode_attention_reference(qd, kd, vd, 1500)
+    err = float(np.max(np.abs(np.float32(out) - np.float32(want))))
+    b.add("kernel/decode_attention_interpret", f"max_err_vs_ref={err:.1e}", us, err < 3e-2)
+    return b
+
+
+if __name__ == "__main__":
+    for r in run().rows:
+        print(r.csv())

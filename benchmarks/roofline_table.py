@@ -1,0 +1,70 @@
+"""§Roofline table generator: reads the dry-run JSONL (launch/dryrun.py --out)
+and emits one row per (arch x shape x mesh) with the three terms, bottleneck,
+and mfu bound. Skips gracefully when the dry-run hasn't been executed."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Bench
+
+RESULTS = os.environ.get("DRYRUN_RESULTS",
+                         os.path.join(os.path.dirname(__file__), "..", "results",
+                                      "dryrun.jsonl"))
+
+
+def load_records(path=RESULTS):
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return list(recs.values())
+
+
+def run(quick: bool = False) -> Bench:
+    b = Bench()
+    recs = load_records()
+    if not recs:
+        b.add("roofline/NO_DRYRUN_RESULTS",
+              f"run `python -m repro.launch.dryrun --arch all --out {RESULTS}`", 0.0)
+        return b
+    n_ok = n_skip = n_err = 0
+    for r in sorted(recs, key=lambda x: (x["mesh"], x["arch"], x["shape"])):
+        key = f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            b.add(key, f"SKIPPED: {r['reason'][:80]}", 0.0)
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            b.add(key, "ERROR", 0.0, False)
+            continue
+        n_ok += 1
+        ro = r["roofline"]
+        terms = {"c": ro["t_compute_s"], "m": ro["t_memory_s"], "x": ro["t_collective_s"]}
+        bound = max(terms.values()) or 1.0
+        ideal = terms["m"] if r["shape"].startswith(("decode", "long")) else terms["c"]
+        ro["roofline_fraction"] = ideal / bound  # recompute (older records lack it)
+        b.add(key,
+              f"C={ro['t_compute_s']*1e3:.2f}ms M={ro['t_memory_s']*1e3:.2f}ms "
+              f"X={ro['t_collective_s']*1e3:.2f}ms bound={ro['bottleneck']} "
+              f"roofline_frac={ro.get('roofline_fraction', 0):.3f} "
+              f"mfu={ro['mfu_bound']:.3f} fits={r['fits_hbm']} "
+              f"{r['bytes_per_device']/2**30:.1f}GiB/dev",
+              (r.get("compile_s", 0) + r.get("compile_unrolled_s", 0)) * 1e6,
+              None)  # informational: baseline fits issues are §Perf material
+    b.add("roofline/summary", f"ok={n_ok} skipped={n_skip} errors={n_err}", 0.0,
+          n_err == 0)
+    return b
+
+
+if __name__ == "__main__":
+    for r in run().rows:
+        print(r.csv())

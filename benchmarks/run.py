@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived[,PASS|FAIL]`` CSV rows; rows carrying a
+validation flag assert the corresponding paper claim (DESIGN.md §7).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig13]
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.fig04_phase_timeseries",
+    "benchmarks.fig05_config_sweeps",
+    "benchmarks.fig06_07_capping",
+    "benchmarks.fig08_09_training",
+    "benchmarks.table2_cluster_stats",
+    "benchmarks.fig13_threshold_search",
+    "benchmarks.fig14_15_throughput_sweeps",
+    "benchmarks.fig16_six_week",
+    "benchmarks.fig17_18_policy_comparison",
+    "benchmarks.fig19_beyond_llm",
+    "benchmarks.phase_aware_savings",
+    "benchmarks.kernel_micro",
+    "benchmarks.roofline_table",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived[,validation]")
+    n_fail = 0
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            bench = mod.run(quick=args.quick)
+            for row in bench.rows:
+                print(row.csv())
+                if row.ok is False:
+                    n_fail += 1
+        except Exception:
+            print(f"{modname},0.0,EXCEPTION,FAIL")
+            traceback.print_exc()
+            n_fail += 1
+        sys.stdout.flush()
+    print(f"# validation_failures={n_fail}")
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

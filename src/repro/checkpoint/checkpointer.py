@@ -1,0 +1,96 @@
+"""Fault-tolerant checkpointing: atomic, step-indexed, resumable.
+
+Production shape: every ``interval`` steps the train state (params, optimizer
+moments, step counter, data-pipeline cursor) is flattened and written to
+``<dir>/step_<n>.npz`` via a temp-file rename (atomic on POSIX), then old
+checkpoints beyond ``keep`` are garbage-collected. ``restore_latest``
+tolerates torn/corrupt files (a killed writer) by falling back to the newest
+readable checkpoint — the property the runtime's crash-restart tests exercise.
+
+On a real multi-host pod each host writes its addressable shards (the layout
+here is the single-host degenerate case of that; the pytree path scheme is
+host-count independent).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, state: Any, *, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(state)
+    flat["__step__"] = np.asarray(step, np.int64)
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        final = os.path.join(ckpt_dir, f"step_{step}.npz")
+        os.replace(tmp, final)  # atomic
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(list_steps(ckpt_dir))
+    for s in steps[:-keep] if keep else []:
+        try:
+            os.unlink(os.path.join(ckpt_dir, f"step_{s}.npz"))
+        except OSError:
+            pass
+
+
+def list_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for fn in os.listdir(ckpt_dir):
+        m = _STEP_RE.search(fn)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def restore(ckpt_dir: str, step: int, state_template: Any) -> Any:
+    """Restore into the template's structure (and shardings, via device_put)."""
+    path = os.path.join(ckpt_dir, f"step_{step}.npz")
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+    new_leaves = []
+    for p, leaf in leaves_with_path:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        arr = flat[key]
+        if hasattr(leaf, "sharding"):
+            arr = jax.device_put(arr.astype(leaf.dtype), leaf.sharding)
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def restore_latest(ckpt_dir: str, state_template: Any) -> Tuple[Optional[int], Any]:
+    """Newest readable checkpoint (corrupt files skipped), or (None, template)."""
+    for step in reversed(list_steps(ckpt_dir)):
+        try:
+            return step, restore(ckpt_dir, step, state_template)
+        except Exception:
+            continue  # torn write — fall back to the previous checkpoint
+    return None, state_template

@@ -1,0 +1,50 @@
+"""Architecture registry: the 10 assigned archs + the paper's own workloads."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+# assigned (arch-id -> module name)
+ASSIGNED = {
+    "whisper-base": "whisper_base",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "internvl2-1b": "internvl2_1b",
+    "llama3.2-1b": "llama3_2_1b",
+    "gemma2-9b": "gemma2_9b",
+    "yi-34b": "yi_34b",
+    "qwen3-8b": "qwen3_8b",
+    "mamba2-370m": "mamba2_370m",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+}
+
+# the paper's own characterization workloads (Figure 3)
+PAPER_OWN = {
+    "roberta-large": "roberta_large",
+    "gpt-neox-20b": "gpt_neox_20b",
+    "opt-30b": "opt_30b",
+    "bloom-176b": "bloom_176b",
+    "flan-t5-xxl": "flan_t5_xxl",
+}
+
+ALL = {**ASSIGNED, **PAPER_OWN}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ALL:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ALL)}")
+    mod = importlib.import_module(f"repro.configs.{ALL[name]}")
+    return mod.CONFIG
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    mod = importlib.import_module(f"repro.configs.{ALL[name]}")
+    return mod.SMOKE
+
+
+def assigned_archs() -> List[str]:
+    return list(ASSIGNED)

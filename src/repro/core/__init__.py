@@ -1,0 +1,1 @@
+"""POLCA: power oversubscription for LLM clusters (the paper's contribution)."""

@@ -1,0 +1,298 @@
+"""Discrete-event simulator of an LLM inference row under POLCA (paper §6).
+
+Model (matches §6.1):
+  * a row of N servers, each dedicated to one workload class (Table 4 mix)
+    with a one-request buffer (load-balanced arrivals, queueing delays);
+  * each request: prefill phase (compute-bound power spike) then
+    ``out_tokens`` of decode (memory-bound, low flat power) — timings and
+    per-phase power from ``core.workload`` (roofline-derived);
+  * a rack power manager samples row power every ``telemetry_s`` (2 s, Table 1)
+    and runs a policy (Algorithm 1 or a baseline); frequency-cap commands take
+    effect after ``oob_latency_s`` (40 s), powerbrake after ``brake_latency_s``
+    (5 s);
+  * oversubscription: provisioned row power is set for ``n_provisioned``
+    servers; the row actually hosts N >= n_provisioned.
+
+Everything is deterministic given the trace (seeded), so policy comparisons
+diff per-request latencies against an uncapped reference run.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.power_model import FREQ_UNCAPPED, ServerPower
+from repro.core.slo import LatencyStats
+from repro.core.workload import RequestTiming
+
+
+@dataclass(frozen=True)
+class Request:
+    t_arrival: float
+    wl: int  # workload-class index
+    prompt: int
+    out_tokens: int
+    priority: str  # "high" | "low"
+    rid: int
+
+
+@dataclass(frozen=True)
+class WorkloadClass:
+    name: str
+    timing: RequestTiming  # from core.workload.request_timing
+    priority_mix: float  # fraction of requests that are high priority
+
+
+@dataclass
+class SimConfig:
+    telemetry_s: float = 2.0
+    oob_latency_s: float = 40.0
+    brake_latency_s: float = 5.0
+    power_scale: float = 1.0  # robustness runs: x1.05 = +5% workload power
+    record_power: bool = True
+    power_sample_s: float = 2.0
+
+
+@dataclass
+class SimResult:
+    latency: LatencyStats
+    n_brakes: int
+    n_dropped: int
+    n_completed: int
+    served_tokens: float
+    peak_power_frac: float
+    mean_power_frac: float
+    power_t: np.ndarray = field(default=None, repr=False)
+    power_w: np.ndarray = field(default=None, repr=False)
+    latencies: Dict[int, float] = field(default_factory=dict, repr=False)
+    cap_events: int = 0
+
+    def spike(self, window_s: float) -> float:
+        """Max increase of power (fraction of provisioned) over any window."""
+        if self.power_w is None or len(self.power_w) < 3:
+            return 0.0
+        dt = self.power_t[1] - self.power_t[0]
+        k = max(1, int(round(window_s / dt)))
+        w = self.power_w
+        diffs = w[k:] - w[:-k]
+        return float(diffs.max()) if len(diffs) else 0.0
+
+
+class _Server:
+    __slots__ = ("idx", "wl", "priority", "state", "queue", "cur", "work_left",
+                 "epoch", "freq", "t_service_start", "power_w", "t_last")
+
+    def __init__(self, idx, wl, priority):
+        self.idx = idx
+        self.wl = wl
+        self.priority = priority
+        self.state = "idle"  # idle | prefill | decode
+        self.queue: List[Request] = []
+        self.cur: Optional[Request] = None
+        self.work_left = 0.0  # seconds of f=1 work in current phase
+        self.epoch = 0
+        self.freq = FREQ_UNCAPPED
+        self.t_service_start = 0.0
+        self.power_w = 0.0
+        self.t_last = 0.0
+
+
+class RowSimulator:
+    def __init__(self, workloads: List[WorkloadClass], server_power: ServerPower,
+                 n_servers: int, n_provisioned: int, policy, requests: List[Request],
+                 wl_server_share: List[float], sim_cfg: SimConfig = None,
+                 duration: float = None, rng_seed: int = 0,
+                 provisioned_w: float = None):
+        self.workloads = workloads
+        self.sp = server_power
+        self.policy = policy
+        self.cfg = sim_cfg or SimConfig()
+        self.provisioned_w = provisioned_w or (n_provisioned * server_power.provisioned_w)
+        self.requests = requests
+        self.duration = duration or (requests[-1].t_arrival + 600 if requests else 600)
+        self.rng = np.random.default_rng(rng_seed)
+
+        # dedicate servers to workload classes per the Table-4 share
+        self.servers: List[_Server] = []
+        counts = [max(1, int(round(s * n_servers))) for s in wl_server_share]
+        while sum(counts) > n_servers:
+            counts[counts.index(max(counts))] -= 1
+        while sum(counts) < n_servers:
+            counts[counts.index(min(counts))] += 1
+        idx = 0
+        self.by_wl: Dict[int, List[_Server]] = {i: [] for i in range(len(workloads))}
+        for w, c in enumerate(counts):
+            n_hp = int(round(c * workloads[w].priority_mix))
+            for j in range(c):
+                prio = "high" if j < n_hp else "low"
+                s = _Server(idx, w, prio)
+                self.servers.append(s)
+                self.by_wl[w].append(s)
+                idx += 1
+
+        self.row_power = sum(self._server_power(s) for s in self.servers)
+        for s in self.servers:
+            s.power_w = self._server_power(s)
+
+        self.lp_freq = FREQ_UNCAPPED
+        self.hp_freq = FREQ_UNCAPPED
+        self.events: List[Tuple[float, int, str, tuple]] = []
+        self._eid = 0
+        self.result = SimResult(LatencyStats(), 0, 0, 0, 0.0, 0.0, 0.0)
+        self._power_samples_t: List[float] = []
+        self._power_samples_w: List[float] = []
+        self._power_integral = 0.0
+        self._last_power_t = 0.0
+        self._peak = 0.0
+
+    # ------------------------------------------------------------------
+    def _push(self, t, kind, args=()):
+        self._eid += 1
+        heapq.heappush(self.events, (t, self._eid, kind, args))
+
+    def _server_power(self, s: _Server) -> float:
+        dev = self.sp.device
+        n = self.sp.n_devices
+        if s.state == "idle":
+            p = n * dev.idle_w + self.sp.other_w
+        else:
+            wl = self.workloads[s.wl]
+            point = wl.timing.prefill_point if s.state == "prefill" else wl.timing.token_point
+            p = point.power_at(self.sp, s.freq)
+        return p * self.cfg.power_scale
+
+    def _update_power(self, s: _Server, t: float):
+        new_p = self._server_power(s)
+        if new_p != s.power_w:
+            self._account_power(t)
+            self.row_power += new_p - s.power_w
+            s.power_w = new_p
+            self._peak = max(self._peak, self.row_power)
+
+    def _account_power(self, t: float):
+        self._power_integral += self.row_power * (t - self._last_power_t)
+        self._last_power_t = t
+
+    # ------------------------------------------------------------------
+    def _start_next(self, s: _Server, t: float):
+        if not s.queue:
+            s.state = "idle"
+            s.cur = None
+            self._update_power(s, t)
+            return
+        req = s.queue.pop(0)
+        s.cur = req
+        s.state = "prefill"
+        s.t_service_start = t
+        wl = self.workloads[s.wl]
+        s.work_left = wl.timing.t_prefill
+        s.epoch += 1
+        self._schedule_phase_end(s, t)
+        self._update_power(s, t)
+
+    def _rate(self, s: _Server) -> float:
+        """Work-seconds per wall-second at the current frequency."""
+        wl = self.workloads[s.wl]
+        point = wl.timing.prefill_point if s.state == "prefill" else wl.timing.token_point
+        return 1.0 / self.sp.device.perf_scale(point.compute_frac, s.freq)
+
+    def _schedule_phase_end(self, s: _Server, t: float):
+        s.t_last = t
+        dt = s.work_left / self._rate(s)
+        self._push(t + dt, "phase_end", (s.idx, s.epoch))
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        for r in self.requests:
+            self._push(r.t_arrival, "arrival", (r,))
+        self._push(self.cfg.telemetry_s, "telemetry", ())
+        res = self.result
+        t = 0.0
+        while self.events:
+            t, _, kind, args = heapq.heappop(self.events)
+            if t > self.duration:
+                break
+            if kind == "arrival":
+                (req,) = args
+                # route within the workload class AND the request's priority
+                # pool: HP requests must not land on LP-capped servers
+                cands = [s for s in self.by_wl[req.wl] if s.priority == req.priority]
+                if not cands:
+                    cands = self.by_wl[req.wl]
+                idle = [s for s in cands if s.state == "idle"]
+                buf = [s for s in cands if s.state != "idle" and len(s.queue) < 1]
+                if idle:
+                    s = idle[int(self.rng.integers(len(idle)))]
+                    s.queue.append(req)
+                    self._start_next(s, t)
+                elif buf:
+                    s = min(buf, key=lambda x: len(x.queue))
+                    s.queue.append(req)
+                else:
+                    res.n_dropped += 1
+            elif kind == "phase_end":
+                sid, epoch = args
+                s = self.servers[sid]
+                if epoch != s.epoch or s.state == "idle":
+                    continue  # stale event
+                if s.state == "prefill":
+                    s.state = "decode"
+                    wl = self.workloads[s.wl]
+                    s.work_left = s.cur.out_tokens * wl.timing.t_token
+                    s.epoch += 1
+                    self._schedule_phase_end(s, t)
+                    self._update_power(s, t)
+                else:
+                    req = s.cur
+                    wl = self.workloads[s.wl]
+                    # unqueued, uncapped ideal latency
+                    ideal = wl.timing.t_prefill + req.out_tokens * wl.timing.t_token
+                    actual = t - req.t_arrival
+                    res.latency.add(req.priority, actual, ideal)
+                    res.latencies[req.rid] = actual
+                    res.n_completed += 1
+                    res.served_tokens += req.out_tokens
+                    self._start_next(s, t)
+            elif kind == "telemetry":
+                p_frac = self.row_power / self.provisioned_w
+                for cmd in self.policy.step(p_frac):
+                    lat = self.cfg.brake_latency_s if cmd.brake else self.cfg.oob_latency_s
+                    self._push(t + lat, "apply", (cmd.lp_freq, cmd.hp_freq))
+                    res.cap_events += 1
+                if self.cfg.record_power:
+                    self._power_samples_t.append(t)
+                    self._power_samples_w.append(p_frac)
+                self._push(t + self.cfg.telemetry_s, "telemetry", ())
+            elif kind == "apply":
+                lp, hp = args
+                if lp is not None:
+                    self.lp_freq = lp
+                if hp is not None:
+                    self.hp_freq = hp
+                for s in self.servers:
+                    f = self.lp_freq if s.priority == "low" else self.hp_freq
+                    if f != s.freq:
+                        if s.state != "idle":
+                            # bank progress at the old rate, then re-plan
+                            s.work_left = max(
+                                0.0, s.work_left - (t - s.t_last) * self._rate(s))
+                            s.freq = f
+                            s.epoch += 1
+                            self._schedule_phase_end(s, t)
+                        else:
+                            s.freq = f
+                        self._update_power(s, t)
+        self._account_power(t if t <= self.duration else self.duration)
+        res.n_brakes = self.policy.n_brakes
+        res.peak_power_frac = self._peak / self.provisioned_w
+        dur = max(1e-9, self._last_power_t)
+        res.mean_power_frac = self._power_integral / dur / self.provisioned_w
+        if self.cfg.record_power:
+            res.power_t = np.asarray(self._power_samples_t)
+            res.power_w = np.asarray(self._power_samples_w)
+        return res

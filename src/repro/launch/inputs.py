@@ -1,0 +1,119 @@
+"""Sharding-rule selection and abstract input specs for every step kind.
+
+``input_specs`` returns weak-type-correct ``jax.ShapeDtypeStruct`` stand-ins
+with attached shardings — shardable, no device allocation — exactly what
+``jax.jit(...).lower(...)`` needs for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as model_mod
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.param import Rules, fsdp_rules, logical_to_spec, resolve_spec, serve_rules, train_rules
+
+
+def _axes_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def make_rules(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Rules:
+    multi = "pod" in mesh.axis_names
+    if shape.kind == "train":
+        rules = dict(fsdp_rules(multi) if cfg.train_strategy == "fsdp"
+                     else train_rules(multi))
+    else:
+        rules = dict(serve_rules(multi, cfg.decode_seq_shard and shape.is_decode))
+    # batch divisibility: progressively shrink the batch axes until they divide
+    batch_axes = rules.get("batch")
+    if batch_axes is not None:
+        axes = (batch_axes,) if isinstance(batch_axes, str) else tuple(batch_axes)
+        while axes and shape.global_batch % _axes_size(mesh, axes) != 0:
+            axes = axes[1:]
+        rules["batch"] = axes if axes else None
+    # decode: experts resident over (data x model) with token routing — the
+    # only layout where 400B-1T MoE weights fit a serving pod (see moe.py)
+    if shape.is_decode and cfg.moe_num_experts:
+        rules["moe_mode"] = "token"
+        rules["expert_slot"] = ("data", "model")
+        rules["expert_embed"] = None
+    # tiny batches free the data axis: use it for KV sequence sharding too
+    if shape.is_decode and cfg.decode_seq_shard and rules["batch"] is None:
+        rules["kv_seq"] = ("data", "model") if "pod" not in mesh.axis_names else (
+            "pod", "data", "model")
+    return rules
+
+
+def split_seq(cfg: ModelConfig, seq_len: int) -> Tuple[int, int]:
+    """(encoder_len, decoder_len) for enc-dec models; (0, seq) otherwise."""
+    if not cfg.is_encoder_decoder:
+        return 0, seq_len
+    enc = int(seq_len * cfg.encoder_seq_frac)
+    if cfg.max_encoder_len:
+        enc = min(enc, cfg.max_encoder_len)
+    return enc, seq_len - enc
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: Rules) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    bspec = rules.get("batch")
+    enc_S, dec_S = split_seq(cfg, S)
+    out: Dict[str, Any] = {}
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = _sds((B, enc_S, cfg.d_model), jnp.bfloat16, mesh, P(bspec, None, None))
+        out["tokens"] = _sds((B, dec_S), jnp.int32, mesh, P(bspec, None))
+    elif cfg.frontend == "vision_stub":
+        n_img = cfg.num_image_embeds
+        out["image_embeds"] = _sds((B, n_img, cfg.d_model), jnp.bfloat16, mesh, P(bspec, None, None))
+        out["tokens"] = _sds((B, S - n_img), jnp.int32, mesh, P(bspec, None))
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32, mesh, P(bspec, None))
+    if cfg.is_encoder_only:
+        out["targets"] = _sds(out["tokens"].shape, jnp.int32, mesh, P(bspec, None))
+    return out
+
+
+def prefill_input_specs(cfg, shape, mesh, rules) -> Dict[str, Any]:
+    return train_input_specs(cfg, shape, mesh, rules)
+
+
+def cache_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: Rules):
+    enc_S, dec_S = split_seq(cfg, shape.seq_len)
+    spec_tree = model_mod.cache_specs(cfg, shape.global_batch, dec_S, enc_S)
+    return jax.tree.map(
+        lambda s: _sds(s.shape, s.dtype, mesh, resolve_spec(s.shape, s.logical, rules, mesh)),
+        spec_tree,
+        is_leaf=lambda x: hasattr(x, "logical"),
+    )
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: Rules) -> Dict[str, Any]:
+    B = shape.global_batch
+    bspec = rules.get("batch")
+    return {
+        "token": _sds((B, 1), jnp.int32, mesh, P(bspec, None)),
+        "pos": _sds((), jnp.int32, mesh, P()),
+        "cache": cache_input_specs(cfg, shape, mesh, rules),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: Rules) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape, mesh, rules)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape, mesh, rules)
+    return decode_input_specs(cfg, shape, mesh, rules)

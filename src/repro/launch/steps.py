@@ -1,0 +1,93 @@
+"""Jit-able train / prefill / decode steps with explicit shardings."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as model_mod
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.param import (
+    Rules,
+    abstract_params,
+    logical_to_spec,
+    param_shardings,
+    resolve_spec,
+)
+from repro.launch import inputs as inputs_mod
+from repro.optim import Optimizer
+
+
+def model_param_specs(cfg: ModelConfig, mesh, rules: Rules = None) -> Any:
+    moe_shards = 0
+    if rules is not None and rules.get("moe_mode") == "token":
+        moe_shards = mesh.shape["data"] * mesh.shape["model"]
+    return model_mod.model_specs(cfg, mesh.shape["model"], moe_shards)
+
+
+def abstract_state(cfg: ModelConfig, mesh, rules: Rules, opt: Optional[Optimizer]):
+    """Abstract (ShapeDtypeStruct + sharding) train/serve state."""
+    pspecs = model_param_specs(cfg, mesh, rules)
+    trees = {"params": pspecs}
+    if opt is not None:
+        trees["opt"] = opt.init_specs(pspecs)
+
+    def to_sds(s):
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(mesh, resolve_spec(s.shape, s.logical, rules, mesh)),
+        )
+
+    return jax.tree.map(to_sds, trees, is_leaf=lambda x: hasattr(x, "logical"))
+
+
+def build_train_step(cfg: ModelConfig, mesh, rules: Rules, opt: Optimizer):
+    ctx = model_mod.MeshCtx(mesh, rules)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def lf(p):
+            return model_mod.loss_fn(cfg, p, batch, ctx)
+
+        loss, grads = jax.value_and_grad(lf)(params)
+        new_params, new_opt, gnorm = opt.update(grads, state["opt"], params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: Rules):
+    ctx = model_mod.MeshCtx(mesh, rules)
+    _, dec_S = inputs_mod.split_seq(cfg, shape.seq_len)
+    max_len = model_mod.cache_len(dec_S)
+
+    def prefill_step(params, batch):
+        return model_mod.prefill_fn(cfg, params, batch, ctx, max_len=max_len)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, mesh, rules: Rules):
+    ctx = model_mod.MeshCtx(mesh, rules)
+
+    def decode_step(params, token, pos, cache):
+        return model_mod.decode_fn(cfg, params, token, pos, cache, ctx)
+
+    return decode_step
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: Rules):
+    """The step a shape cell lowers: train_step for train shapes, prefill for
+    prefill shapes, one-token decode for decode shapes."""
+    if shape.kind == "train":
+        opt = Optimizer(cfg.optimizer)
+        return build_train_step(cfg, mesh, rules, opt), opt
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, rules), None
+    return build_decode_step(cfg, mesh, rules), None

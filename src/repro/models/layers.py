@@ -1,0 +1,87 @@
+"""Shared neural-net building blocks (pure functions over param pytrees)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(dim: int, logical=("act_embed",)) -> ParamSpec:
+    return ParamSpec((dim,), logical, init="ones")
+
+
+def rmsnorm(x, w, eps: float):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """Apply RoPE. x: [..., S, H, D]; positions: [..., S] (broadcastable).
+
+    Angles are computed in fp32 (position * freq needs the range) but the
+    rotation itself runs in x.dtype: multiplying bf16 activations by fp32
+    cos/sin promotes q/k — and, transposed, their backward — to fp32, which
+    doubles every tensor-parallel activation all-reduce (EXPERIMENTS §Perf H2).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    wd = cfg.weight_dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((D, F), ("embed", "mlp"), dtype=wd),
+            "w_up": ParamSpec((D, F), ("embed", "mlp"), dtype=wd),
+            "w_down": ParamSpec((F, D), ("mlp", "embed"), dtype=wd),
+        }
+    return {
+        "w_up": ParamSpec((D, F), ("embed", "mlp"), dtype=wd),
+        "w_down": ParamSpec((F, D), ("mlp", "embed"), dtype=wd),
+    }
+
+
+def mlp(cfg: ModelConfig, p: dict, x):
+    dt = cfg.activation_dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        g = x @ p["w_gate"].astype(dt)
+        u = x @ p["w_up"].astype(dt)
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(g) * u
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(dt))
+    return h @ p["w_down"].astype(dt)
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x

@@ -1,0 +1,188 @@
+"""Mamba2 (SSD, state-space duality) blocks — chunked matmul form + decode step.
+
+The chunked SSD forward (quadratic-within-chunk + linear state passing across
+chunks) is the TPU-friendly matmul formulation from arXiv:2405.21060. A naive
+sequential recurrence lives in ``repro.kernels.ref`` as the oracle; the decode
+step below *is* that recurrence for a single token.
+
+Shapes: d_inner = expand*d_model, H = d_inner//headdim heads, G groups sharing
+(B, C) projections of state size N.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.param import ParamSpec
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_headdim
+    return d_in, H, cfg.ssm_n_groups, cfg.ssm_d_state
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    d_in, H, G, N = ssm_dims(cfg)
+    W = cfg.ssm_conv_width
+    wd = cfg.weight_dtype
+    return {
+        "w_z": ParamSpec((D, d_in), ("embed", "ssm_inner"), dtype=wd),
+        "w_x": ParamSpec((D, d_in), ("embed", "ssm_inner"), dtype=wd),
+        "w_B": ParamSpec((D, G * N), ("embed", None), dtype=wd),
+        "w_C": ParamSpec((D, G * N), ("embed", None), dtype=wd),
+        "w_dt": ParamSpec((D, H), ("embed", "ssm_heads"), dtype=wd),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), init="ssm_dt", dtype=wd),
+        "A_log": ParamSpec((H,), ("ssm_heads",), init="ssm_a", dtype=wd),
+        "D_skip": ParamSpec((H,), ("ssm_heads",), init="ones", dtype=wd),
+        "conv_x": ParamSpec((W, d_in), ("conv", "ssm_inner"), scale=1.0, dtype=wd),
+        "conv_B": ParamSpec((W, G * N), ("conv", None), dtype=wd),
+        "conv_C": ParamSpec((W, G * N), ("conv", None), dtype=wd),
+        "gate_norm": ParamSpec((d_in,), ("ssm_inner",), init="ones", dtype=wd),
+        "w_out": ParamSpec((d_in, D), ("ssm_inner", "embed"), dtype=wd),
+    }
+
+
+def _causal_conv(x, w, tail=None):
+    """Depthwise causal conv along S. x: [B,S,C]; w: [W,C]; tail: [B,W-1,C]
+    carried state for decode/continuation. Returns (y, new_tail)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    new_tail = xp[:, xp.shape[1] - (W - 1) :, :]
+    return y, new_tail
+
+
+def _project(cfg, p, x):
+    dt_ = cfg.activation_dtype
+    z = x @ p["w_z"].astype(dt_)
+    xin = x @ p["w_x"].astype(dt_)
+    Bm = x @ p["w_B"].astype(dt_)
+    Cm = x @ p["w_C"].astype(dt_)
+    dt_raw = (x @ p["w_dt"].astype(dt_)).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw)  # [B,S,H] fp32
+    return z, xin, Bm, Cm, dt
+
+
+def ssm_forward(cfg: ModelConfig, p: dict, x, *, init_state=None, conv_tails=None,
+                return_state: bool = False):
+    """Full-sequence SSD. x: [B,S,D]. Returns y [B,S,D] (+ (ssm_state, conv_tail))."""
+    B_, S, D = x.shape
+    d_in, H, G, N = ssm_dims(cfg)
+    P = cfg.ssm_headdim
+    act = cfg.activation_dtype
+
+    z, xin, Bm, Cm, dt = _project(cfg, p, x)
+    xin, tail_x = _causal_conv(xin, p["conv_x"].astype(act),
+                               None if conv_tails is None else conv_tails["x"])
+    Bm, tail_B = _causal_conv(Bm, p["conv_B"].astype(act),
+                              None if conv_tails is None else conv_tails["B"])
+    Cm, tail_C = _causal_conv(Cm, p["conv_C"].astype(act),
+                              None if conv_tails is None else conv_tails["C"])
+    xin, Bm, Cm = jax.nn.silu(xin), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    # Pad S up to a chunk multiple. Padded steps get dt=0: decay exp(0)=1 and
+    # zero input contribution, so the final state is exact.
+    Q = min(cfg.ssm_chunk, S)
+    S_orig = S
+    if S % Q:
+        pad = Q - S % Q
+        padf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        xin, Bm, Cm, dt = padf(xin), padf(Bm), padf(Cm), padf(dt)
+        S = S + pad
+    C_ = S // Q
+
+    X = xin.reshape(B_, C_, Q, H, P)
+    Bm = Bm.reshape(B_, C_, Q, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(B_, C_, Q, G, N).astype(jnp.float32)
+    dt = dt.reshape(B_, C_, Q, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [H]
+    dA = dt * A[None, None, None, :]  # [B,c,Q,H]
+    cs = jnp.cumsum(dA, axis=2)  # inclusive
+
+    rep = H // G
+    Xf = X.astype(jnp.float32)
+
+    # --- intra-chunk (quadratic within chunk) ------------------------------
+    # L[q,k] = exp(cs[q]-cs[k]) for q>=k else 0
+    Lexp = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # [B,c,Q,Q,H] (q,k)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(Lexp), 0.0)
+    CB = jnp.einsum("bcqgn,bckgn->bcqkg", Cm, Bm)  # [B,c,Q,Q,G]
+    CB = jnp.repeat(CB, rep, axis=-1)  # [B,c,Q,Q,H]
+    M = CB * L * dt[:, :, None, :, :]  # weight for input k at query q
+    Y = jnp.einsum("bcqkh,bckhp->bcqhp", M, Xf)
+
+    # --- chunk states -------------------------------------------------------
+    decay_states = jnp.exp(cs[:, :, -1:, :] - cs)  # [B,c,Q,H]
+    Bh = jnp.repeat(Bm, rep, axis=3)  # [B,c,Q,H,N]
+    states = jnp.einsum("bckhn,bckh,bckhp->bchnp", Bh, decay_states * dt, Xf)
+
+    # --- inter-chunk recurrence ---------------------------------------------
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # [B,c,H]
+    if init_state is None:
+        init_state = jnp.zeros((B_, H, N, P), jnp.float32)
+
+    def scan_body(s_prev, inp):
+        st_c, dec_c = inp  # [B,H,N,P], [B,H]
+        s_new = s_prev * dec_c[:, :, None, None] + st_c
+        return s_new, s_prev
+
+    sts = jnp.moveaxis(states, 1, 0)  # [c,B,H,N,P]
+    decs = jnp.moveaxis(chunk_decay, 1, 0)  # [c,B,H]
+    final_state, prev_states = jax.lax.scan(scan_body, init_state.astype(jnp.float32), (sts, decs))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B,c,H,N,P] state at chunk starts
+
+    Ch = jnp.repeat(Cm, rep, axis=3)  # [B,c,Q,H,N]
+    Y += jnp.einsum("bcqhn,bchnp->bcqhp", Ch * jnp.exp(cs)[..., None], prev_states)
+
+    # --- skip, gate, out ------------------------------------------------------
+    Y += p["D_skip"].astype(jnp.float32)[None, None, None, :, None] * Xf
+    y = Y.reshape(B_, S, d_in)[:, :S_orig].astype(act)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(act)
+    if return_state:
+        return out, (final_state, {"x": tail_x, "B": tail_B, "C": tail_C})
+    return out
+
+
+def ssm_decode(cfg: ModelConfig, p: dict, x, state, conv_tails):
+    """One-token recurrence. x: [B,1,D]; state: [B,H,N,P] fp32."""
+    B_, _, D = x.shape
+    d_in, H, G, N = ssm_dims(cfg)
+    P = cfg.ssm_headdim
+    act = cfg.activation_dtype
+
+    z, xin, Bm, Cm, dt = _project(cfg, p, x)
+    xin, tail_x = _causal_conv(xin, p["conv_x"].astype(act), conv_tails["x"])
+    Bm, tail_B = _causal_conv(Bm, p["conv_B"].astype(act), conv_tails["B"])
+    Cm, tail_C = _causal_conv(Cm, p["conv_C"].astype(act), conv_tails["C"])
+    xin, Bm, Cm = jax.nn.silu(xin), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    X = xin.reshape(B_, H, P).astype(jnp.float32)
+    Bm = Bm.reshape(B_, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(B_, G, N).astype(jnp.float32)
+    dt = dt.reshape(B_, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])  # [B,H]
+
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)  # [B,H,N]
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    state = state * dA[:, :, None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", Bh, dt, X
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    y += p["D_skip"].astype(jnp.float32)[None, :, None] * X
+    y = y.reshape(B_, 1, d_in).astype(act)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(act)
+    return out, (state, {"x": tail_x, "B": tail_B, "C": tail_C})

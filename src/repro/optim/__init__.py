@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    OptState,
+    global_norm,
+    make_optimizer,
+    opt_init_specs,
+)

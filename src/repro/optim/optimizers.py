@@ -1,0 +1,171 @@
+"""Optimizers: AdamW and factored Adafactor, as pure functions over pytrees.
+
+Optimizer state mirrors parameter sharding (FSDP: ZeRO-sharded moments). The
+state tree is built from ``ParamSpec``s so the dry-run can get abstract state
+with correct shardings without allocating (``opt_init_specs``).
+
+Optional gradient compression (int8 + error feedback) for the data-parallel
+all-reduce lives in ``repro.optim.compression`` and wraps the grads before
+the optimizer update.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamSpec, is_spec, tree_map_specs
+
+OptState = Dict[str, Any]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def _adamw_init_specs(param_specs) -> OptState:
+    def mom(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, s.logical, init="zeros", dtype=jnp.float32)
+
+    return {
+        "mu": tree_map_specs(mom, param_specs),
+        "nu": tree_map_specs(mom, param_specs),
+    }
+
+
+def _adamw_update(grads, state, params, *, lr, b1, b2, eps, wd):
+    c = state["count"] + 1
+    cf = c.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mu_hat = mu / (1 - b1 ** cf)
+        nu_hat = nu / (1 - b2 ** cf)
+        step = mu_hat / (jnp.sqrt(nu_hat) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), mu, nu
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "mu": treedef.unflatten([o[1] for o in out]),
+        "nu": treedef.unflatten([o[2] for o in out]),
+        "count": c,
+    }
+    return new_p, new_state
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; no first moment) — for the 1T-param archs
+# ---------------------------------------------------------------------------
+
+def _adafactor_init_specs(param_specs) -> OptState:
+    def row(s: ParamSpec):
+        if len(s.shape) < 2:
+            return ParamSpec(s.shape, s.logical, init="zeros", dtype=jnp.float32)
+        return ParamSpec(s.shape[:-1], s.logical[:-1], init="zeros", dtype=jnp.float32)
+
+    def col(s: ParamSpec):
+        if len(s.shape) < 2:
+            return ParamSpec((1,), (None,), init="zeros", dtype=jnp.float32)
+        return ParamSpec(s.shape[:-2] + s.shape[-1:], s.logical[:-2] + s.logical[-1:],
+                         init="zeros", dtype=jnp.float32)
+
+    return {
+        "vr": tree_map_specs(row, param_specs),
+        "vc": tree_map_specs(col, param_specs),
+    }
+
+
+def _adafactor_update(grads, state, params, *, lr, b2, eps, wd):
+    c = state["count"] + 1
+    cf = c.astype(jnp.float32)
+    decay = 1.0 - cf ** -0.8  # t^-0.8 schedule from the Adafactor paper
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if g.ndim < 2:
+            vr_n = decay * vr + (1 - decay) * g2
+            update = g * jax.lax.rsqrt(vr_n)
+            vc_n = vc
+        else:
+            vr_n = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc_n = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            r = vr_n / jnp.mean(vr_n, axis=-1, keepdims=True)
+            update = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc_n)[..., None, :])
+        # clip update rms to 1.0 (Adafactor d=1)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        newp = p.astype(jnp.float32) * (1 - lr * wd) - lr * update
+        return newp.astype(p.dtype), vr_n, vc_n
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_vr = treedef.flatten_up_to(state["vr"])
+    flat_vc = treedef.flatten_up_to(state["vc"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, r_, c_, p) for g, r_, c_, p in zip(flat_g, flat_vr, flat_vc, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "vr": treedef.unflatten([o[1] for o in out]),
+        "vc": treedef.unflatten([o[2] for o in out]),
+        "count": c,
+    }
+    return new_p, new_state
+
+
+# ---------------------------------------------------------------------------
+# Public factory
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init_specs(self, param_specs) -> OptState:
+        if self.name == "adafactor":
+            st = _adafactor_init_specs(param_specs)
+        else:
+            st = _adamw_init_specs(param_specs)
+        st["count"] = ParamSpec((), (), init="zeros", dtype=jnp.int32)
+        return st
+
+    def update(self, grads, state, params) -> Tuple[Any, OptState, jax.Array]:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        if self.name == "adafactor":
+            p, s = _adafactor_update(grads, state, params, lr=self.lr, b2=self.b2,
+                                     eps=self.eps, wd=self.weight_decay)
+        else:
+            p, s = _adamw_update(grads, state, params, lr=self.lr, b1=self.b1,
+                                 b2=self.b2, eps=self.eps, wd=self.weight_decay)
+        return p, s, gnorm
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return Optimizer(name=name, **kw)
+
+
+def opt_init_specs(opt: Optimizer, param_specs) -> OptState:
+    return opt.init_specs(param_specs)

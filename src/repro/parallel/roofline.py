@@ -1,0 +1,281 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / ICI_link_bw
+
+``compiled.cost_analysis()`` on this JAX version reports *per-device* FLOPs
+and bytes (verified against a hand-computed matmul), so we divide by per-chip
+peaks — algebraically identical to the assignment's global/(chips*peak) form.
+
+Collective bytes are not in cost_analysis: we parse the post-SPMD-partitioning
+HLO and apply per-op ring-cost formulas (bytes sent per device):
+  all-gather:         R * (n-1)/n        (R = full gathered result bytes)
+  reduce-scatter:     R * (n-1)          (R = scattered result bytes; operand = R*n)
+  all-reduce:         2 * R * (n-1)/n    (RS + AG phases)
+  all-to-all:         R * (n-1)/n
+  collective-permute: R
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# ---- TPU v5e hardware constants (per assignment) ---------------------------
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+HBM_BYTES = 16 * 1024**3  # v5e HBM capacity
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result types on the LHS of `= ... op-name(`
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative default
+
+
+@dataclass
+class CollectiveStats:
+    ops: Dict[str, int] = field(default_factory=dict)  # op kind -> count
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    total_bytes: float = 0.0  # per-device bytes on the wire
+    lines: List[str] = field(default_factory=list)
+
+
+def parse_collectives(hlo_text: str, keep_lines: bool = False) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        kind = None
+        for k in _COLLECTIVES:
+            if "=" not in line:
+                continue
+            if f" {k}(" in line or f" {k}-start(" in line:
+                kind = k
+                break
+        if kind is None or f" {kind}-done(" in line:
+            continue  # async pairs: count the -start only (it has the shapes)
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(kind)[0]
+        r = _shape_bytes(lhs)
+        # XLA:CPU converts bf16 operands to f32 before reducing (the collective
+        # arithmetic runs in f32 on host); TPU reduces bf16 natively. When the
+        # f32 all-reduce consumes a convert fusion, count the TPU (bf16) bytes.
+        if kind in ("all-reduce", "reduce-scatter") and "f32[" in lhs                 and "(%convert" in line:
+            r //= 2
+        n = _group_size(line)
+        if kind == "all-gather":
+            b = r * (n - 1) / n
+        elif kind == "reduce-scatter":
+            b = r * (n - 1)
+        elif kind == "all-reduce":
+            b = 2 * r * (n - 1) / n
+        elif kind == "all-to-all":
+            b = r * (n - 1) / n
+        else:  # collective-permute
+            b = r
+        st.ops[kind] = st.ops.get(kind, 0) + 1
+        st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0.0) + b
+        st.total_bytes += b
+        if keep_lines:
+            st.lines.append(line.strip()[:200])
+    return st
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float  # analytic (exact; see parallel/analytic.py)
+    hbm_bytes_per_device: float  # analytic traffic lower bound
+    collective_bytes_per_device: float  # parsed from post-SPMD HLO
+    model_flops_global: float  # 6*N*D (train) / 2*N*D (inference), active params
+    n_devices: int
+    collectives: Optional[CollectiveStats] = None
+    hlo_flops_per_device: float = 0.0  # compiled cross-check (undercounts loops)
+    hlo_bytes_per_device: float = 0.0
+    kind: str = "train"  # train | prefill | decode
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time: perfectly-overlapped roofline."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global) — catches remat/redundancy waste."""
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the cell sits to its NATURAL roofline: compute-bound for
+        train/prefill (t_compute / t_bound), memory-bound for decode
+        (t_memory / t_bound; decode must stream weights+KV, so the memory
+        term IS the ideal). 1.0 = at the roofline; this is the §Perf score."""
+        t = self.t_bound
+        if t <= 0:
+            return 0.0
+        ideal = self.t_memory if self.kind == "decode" else self.t_compute
+        return ideal / t
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound (the score)."""
+        t = self.t_bound
+        if t <= 0:
+            return 0.0
+        return (self.model_flops_global / self.n_devices / t) / PEAK_FLOPS
+
+    def to_dict(self) -> dict:
+        d = {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "hlo_flops_per_device": self.hlo_flops_per_device,
+            "hlo_bytes_per_device": self.hlo_bytes_per_device,
+            "model_flops_global": self.model_flops_global,
+            "n_devices": self.n_devices,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+            "kind": self.kind,
+            "roofline_fraction": self.roofline_fraction,
+        }
+        if self.collectives:
+            d["collective_ops"] = self.collectives.ops
+            d["collective_bytes_by_kind"] = self.collectives.bytes_by_kind
+        return d
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference) with
+    N = active params (MoE-aware)."""
+    n = cfg.active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def extrapolate_collectives(st1: CollectiveStats, st2: CollectiveStats,
+                            groups: int) -> CollectiveStats:
+    """Linear extrapolation from 1-group/2-group compiles to ``groups``."""
+    out = CollectiveStats()
+    kinds = set(st1.ops) | set(st2.ops)
+    for k in kinds:
+        c1, c2 = st1.ops.get(k, 0), st2.ops.get(k, 0)
+        b1, b2 = st1.bytes_by_kind.get(k, 0.0), st2.bytes_by_kind.get(k, 0.0)
+        # clamp at the 1-group floor: XLA occasionally fuses collectives in the
+        # 2-group graph, which would extrapolate negative
+        out.ops[k] = max(c1, c1 + (groups - 1) * (c2 - c1), 0)
+        out.bytes_by_kind[k] = max(0.0, b1 + (groups - 1) * (b2 - b1))
+        out.total_bytes += out.bytes_by_kind[k]
+    return out
+
+
+def build_roofline_extrapolated(comp1, comp2, cfg, shape, n_devices: int,
+                                enc_S: int, dec_S: int) -> Roofline:
+    """Roofline from 1-group and 2-group fully-unrolled compiles."""
+    from repro.parallel.analytic import step_cost
+
+    g = cfg.num_groups
+    st1 = parse_collectives(comp1.as_text())
+    st2 = parse_collectives(comp2.as_text())
+    st = extrapolate_collectives(st1, st2, g)
+    c1, c2 = comp1.cost_analysis(), comp2.cost_analysis()
+
+    def extrap(key):
+        a, b = float(c1.get(key, 0.0)), float(c2.get(key, 0.0))
+        return a + (g - 1) * (b - a)
+
+    ac = step_cost(cfg, shape, enc_S, dec_S).per_device(n_devices)
+    hbm = ac.hbm_bytes + (0.0 if cfg.use_pallas else ac.attn_score_bytes)
+    return Roofline(
+        flops_per_device=ac.flops,
+        hbm_bytes_per_device=hbm,
+        collective_bytes_per_device=st.total_bytes,
+        model_flops_global=model_flops(cfg, shape),
+        n_devices=n_devices,
+        collectives=st,
+        hlo_flops_per_device=extrap("flops"),
+        hlo_bytes_per_device=extrap("bytes accessed"),
+        kind=shape.kind,
+    )
+
+
+def build_roofline(compiled, cfg, shape, n_devices: int, enc_S: int, dec_S: int,
+                   keep_lines: bool = False) -> Roofline:
+    from repro.parallel.analytic import step_cost
+
+    cost = compiled.cost_analysis()
+    st = parse_collectives(compiled.as_text(), keep_lines=keep_lines)
+    ac = step_cost(cfg, shape, enc_S, dec_S).per_device(n_devices)
+    hbm = ac.hbm_bytes + (0.0 if cfg.use_pallas else ac.attn_score_bytes)
+    return Roofline(
+        flops_per_device=ac.flops,
+        hbm_bytes_per_device=hbm,
+        collective_bytes_per_device=st.total_bytes,
+        model_flops_global=model_flops(cfg, shape),
+        n_devices=n_devices,
+        collectives=st,
+        hlo_flops_per_device=float(cost.get("flops", 0.0)),
+        hlo_bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        kind=shape.kind,
+    )

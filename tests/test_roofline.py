@@ -1,0 +1,106 @@
+"""Roofline machinery: HLO collective parsing + analytic cost sanity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.launch.inputs import split_seq
+from repro.models.config import DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K, shape_applicable
+from repro.parallel import analytic
+from repro.parallel.roofline import Roofline, model_flops, parse_collectives
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[64,1024]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[16,4096,2048]{2,1,0} all-reduce(%y), channel_id=2, replica_groups=[16,16]<=[256], to_apply=%add
+  %rs = bf16[4,128]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[4,4]<=[16], dimensions={0}
+  %cp = u32[8]{0} collective-permute(%w), channel_id=4, source_target_pairs={{0,1}}
+  %a2a = bf16[2,64]{1,0} all-to-all(%v), channel_id=5, replica_groups={{0,1,2,3}}, dimensions={0}
+  %tup = (f32[16,8]{1,0}, f32[16,8]{1,0}) all-reduce(%p, %q), channel_id=6, replica_groups=[2,8]<=[16]
+  %agstart = bf16[64]{0} all-gather-start(%m), channel_id=7, replica_groups=[2,2]<=[4]
+  %not_a_collective = f32[3]{0} add(%a, %b)
+}
+"""
+
+
+def test_parse_collectives_kinds_and_counts():
+    st_ = parse_collectives(HLO)
+    assert st_.ops["all-gather"] == 2  # incl. -start
+    assert st_.ops["all-reduce"] == 2
+    assert st_.ops["reduce-scatter"] == 1
+    assert st_.ops["collective-permute"] == 1
+    assert st_.ops["all-to-all"] == 1
+
+
+def test_parse_collectives_bytes():
+    st_ = parse_collectives(HLO)
+    ag = 64 * 1024 * 2 * (15 / 16)
+    ar = 2 * (16 * 4096 * 2048 * 4) * (15 / 16)
+    rs = 4 * 128 * 2 * 3
+    cp = 8 * 4
+    a2a = 2 * 64 * 2 * (3 / 4)
+    tup = 2 * (2 * 16 * 8 * 4) * (7 / 8)
+    agstart = 64 * 2 * (1 / 2)
+    want = ag + ar + rs + cp + a2a + tup + agstart
+    assert abs(st_.total_bytes - want) / want < 1e-9
+
+
+def test_model_flops_against_param_count():
+    """Analytic einsum count brackets the 6*N*D rule: equal up to the remat
+    factor and the attention-core FLOPs that 6ND ignores."""
+    for name in ("llama3.2-1b", "yi-34b", "qwen3-8b"):
+        cfg = get_config(name)
+        enc_S, dec_S = split_seq(cfg, TRAIN_4K.seq_len)
+        exact = analytic.step_cost(cfg, TRAIN_4K, enc_S, dec_S).flops
+        # 6ND scaled by the fwd-recompute factor (remat 'full': 8ND)
+        simple = model_flops(cfg, TRAIN_4K) * analytic.REMAT_FACTOR[cfg.remat_policy] / 3.0
+        assert 0.9 < exact / simple < 1.6, name
+
+
+def test_moe_active_flops_much_smaller_than_total():
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.total_params() > 0.9e12  # ~1T
+    assert kimi.active_params() < 0.05 * kimi.total_params()
+
+
+def test_decode_cost_is_memory_bound():
+    cfg = get_config("yi-34b")
+    c = analytic.step_cost(cfg, DECODE_32K, 0, DECODE_32K.seq_len)
+    # arithmetic intensity (flops/byte) far below v5e machine balance (~240)
+    assert c.flops / c.hbm_bytes < 60
+
+
+def test_prefill_cost_is_compute_bound():
+    cfg = get_config("yi-34b")
+    c = analytic.step_cost(cfg, PREFILL_32K, 0, PREFILL_32K.seq_len)
+    assert c.flops / c.hbm_bytes > 240  # above machine balance
+
+
+def test_swa_bounds_long_context_flops():
+    """mixtral decode at 500k must cost ~ the 4096-window, not ~ 500k."""
+    cfg = get_config("mixtral-8x7b")
+    c_long = analytic.step_cost(cfg, LONG_500K, 0, LONG_500K.seq_len)
+    big = cfg.replace(window_size=LONG_500K.seq_len)
+    c_full = analytic.step_cost(big, LONG_500K, 0, LONG_500K.seq_len)
+    assert c_long.flops < 0.15 * c_full.flops
+
+
+def test_shape_applicability_rules():
+    assert shape_applicable(get_config("mamba2-370m"), LONG_500K)[0]
+    assert shape_applicable(get_config("jamba-1.5-large-398b"), LONG_500K)[0]
+    assert shape_applicable(get_config("mixtral-8x7b"), LONG_500K)[0]
+    for full in ("llama3.2-1b", "gemma2-9b", "yi-34b", "qwen3-8b",
+                 "internvl2-1b", "kimi-k2-1t-a32b", "whisper-base"):
+        ok, why = shape_applicable(get_config(full), LONG_500K)
+        assert not ok and "full-attention" in why
+
+
+@given(st.floats(1e9, 1e15), st.floats(1e6, 1e13), st.floats(0, 1e12))
+@settings(max_examples=50, deadline=None)
+def test_roofline_bottleneck_consistency(fl, by, co):
+    r = Roofline(fl, by, co, model_flops_global=fl * 256, n_devices=256)
+    t = {"compute": r.t_compute, "memory": r.t_memory, "collective": r.t_collective}
+    assert r.t_bound == max(t.values())
+    assert t[r.bottleneck] == r.t_bound
+    assert 0 <= r.mfu_bound

@@ -1,0 +1,55 @@
+"""resolve_spec / rules properties (hypothesis) + cache padding."""
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_local_mesh
+from repro.models.param import resolve_spec, serve_rules, train_rules
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+@given(st.integers(1, 4096), st.integers(1, 16), st.integers(1, 16))
+@settings(max_examples=200, deadline=None)
+def test_resolve_spec_always_divides(dim, a, b):
+    mesh = FakeMesh({"data": a, "model": b})
+    rules = {"x": ("data", "model")}
+    spec = resolve_spec((dim,), ("x",), rules, mesh)
+    axes = spec[0]
+    if axes is None:
+        return
+    axes = (axes,) if isinstance(axes, str) else axes
+    prod = 1
+    for ax in axes:
+        prod *= mesh.shape[ax]
+    assert dim % prod == 0
+
+
+@given(st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_resolve_spec_keeps_full_rule_when_divisible(k):
+    mesh = FakeMesh({"data": 4, "model": 8})
+    spec = resolve_spec((32 * k,), ("x",), {"x": ("data", "model")}, mesh)
+    assert spec[0] == ("data", "model")
+
+
+def test_cache_len_padding():
+    from repro.models.model import CACHE_PAD, cache_len
+
+    assert cache_len(512) == 512
+    assert cache_len(31268) % CACHE_PAD == 0
+    assert cache_len(31268) >= 31268
+    assert cache_len(1) == CACHE_PAD
+
+
+def test_rules_have_all_logical_axes():
+    for rules in (train_rules(False), train_rules(True),
+                  serve_rules(False), serve_rules(True, True)):
+        for k in ("embed", "heads", "mlp", "vocab", "batch", "kv_seq",
+                  "expert_slot", "expert_embed", "ssm_inner"):
+            assert k in rules

@@ -5,20 +5,20 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import Bench, N_PROVISIONED, SERVER, WEEK, bloom_workloads
-from repro.core.oversubscription import threshold_search
+from benchmarks.common import Bench, WEEK
+from repro.experiments import get_scenario, threshold_search
 
 COMBOS = [(0.75, 0.85), (0.80, 0.89), (0.85, 0.95)]
 
 
 def run(quick: bool = False) -> Bench:
     b = Bench()
-    wls, shares = bloom_workloads()
-    dur = WEEK / 14 if quick else WEEK / 2  # policy exploration on a shorter slice
+    # policy exploration on a shorter slice
+    base = get_scenario("fig13-search-base").with_(
+        duration_s=WEEK / 14 if quick else WEEK / 2)
     grid = [0.20, 0.30] if quick else [0.20, 0.25, 0.30, 0.325, 0.35, 0.40]
     t0 = time.perf_counter()
-    out = threshold_search(COMBOS, wls, shares, SERVER, N_PROVISIONED, dur,
-                           added_grid=grid)
+    out = threshold_search(base, COMBOS, grid)
     us = (time.perf_counter() - t0) * 1e6
     for (t1, t2), r in out.items():
         b.add(f"fig13/T{t1*100:.0f}-{t2*100:.0f}",

@@ -3,23 +3,21 @@ Fig. 15a: capping-frequency sweep for LP at T1.  Fig. 15b: LP-fraction sweep."""
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
-from benchmarks.common import Bench, N_PROVISIONED, SERVER, WEEK, bloom_workloads
-from repro.core.oversubscription import evaluate
-from repro.core.policy import PolcaPolicy
-from repro.core.traces import TABLE4, build_workload_classes
+from benchmarks.common import Bench, WEEK
+from repro.experiments import get_scenario, run_experiment
 
 
 def run(quick: bool = False) -> Bench:
     b = Bench()
-    wls, shares = bloom_workloads()
     dur = WEEK / 14 if quick else WEEK / 2
-    n30 = int(round(N_PROVISIONED * 1.30))
+    base = get_scenario("fig14-plus30").with_(duration_s=dur)
 
     # ---- Fig 14 -------------------------------------------------------------
     t0 = time.perf_counter()
-    o = evaluate(PolcaPolicy, wls, shares, SERVER, N_PROVISIONED, n30, dur)
+    o = run_experiment(base)
     us = (time.perf_counter() - t0) * 1e6
     ok14 = o.throughput_ratio_hp > 0.995 and o.throughput_ratio_lp > 0.98
     b.add("fig14/throughput@+30%",
@@ -35,17 +33,19 @@ def run(quick: bool = False) -> Bench:
     freqs = [1350, 1275, 1110, 1000]
     for mhz in (freqs[:2] if quick else freqs):
         f = mhz / 1410.0
-        oo = evaluate(lambda: PolcaPolicy(lp_freq_t1=f), wls, shares, SERVER,
-                      N_PROVISIONED, n30, dur / 2)
+        oo = run_experiment(base.with_(duration_s=dur / 2)
+                                .with_policy("polca", lp_freq_t1=f))
         ss = oo.stats.summary()
-        ok = (ss["lp_p99"] < 0.50) == (mhz >= 1275)  # paper: below 1275 SLO breaks
         b.add(f"fig15a/lp_cap_{mhz}MHz",
               f"LP p99={ss['lp_p99']:.3%} meets={oo.meets}", 0.0, None)
 
     # ---- Fig 15b: LP fraction sweep ------------------------------------------
     for lp_frac in ([0.3, 0.7] if quick else [0.2, 0.4, 0.6, 0.8]):
-        wls2 = [type(w)(w.name, w.timing, 1 - lp_frac) for w in wls]
-        oo = evaluate(PolcaPolicy, wls2, shares, SERVER, N_PROVISIONED, n30, dur / 2)
+        sc = base.with_(
+            duration_s=dur / 2,
+            traffic=dataclasses.replace(base.traffic,
+                                        priority_mix_override=1 - lp_frac))
+        oo = run_experiment(sc)
         ss = oo.stats.summary()
         b.add(f"fig15b/lp_frac_{lp_frac:.1f}",
               f"HP p99={ss['hp_p99']:.3%} LP p99={ss['lp_p99']:.3%} "

@@ -9,14 +9,8 @@ import time
 import numpy as np
 
 from benchmarks.common import Bench, N_PROVISIONED, SERVER, WEEK, bloom_workloads
-from repro.core.policy import NoCap, PolcaPolicy
-from repro.core.simulator import RowSimulator, SimConfig
-from repro.core.traces import (
-    generate_requests,
-    mape,
-    occupancy_curve,
-    target_power_curve,
-)
+from repro.core.traces import mape, occupancy_curve, target_power_curve
+from repro.experiments import get_scenario, run_experiment
 
 
 def _smooth(x, k):
@@ -29,20 +23,17 @@ def run(quick: bool = False) -> Bench:
     b = Bench()
     wls, shares = bloom_workloads()
     dur = WEEK if quick else 6 * WEEK
-    t_grid = np.arange(0.0, dur, 60.0)
-    occ = occupancy_curve(t_grid, peak=0.97)
+    base = get_scenario("fig16-six-week").with_(duration_s=dur)
 
     t0 = time.perf_counter()
-    reqs = generate_requests(dur, N_PROVISIONED, wls, shares,
-                             occupancy=occ, t_grid=t_grid, seed=23)
-    sim = RowSimulator(wls, SERVER, N_PROVISIONED, N_PROVISIONED, NoCap(), reqs,
-                       shares, SimConfig(), duration=dur)
-    res = sim.run()
+    res = run_experiment(base).result
     us = (time.perf_counter() - t0) * 1e6
 
     # 5-minute averages (the paper's Fig 16 granularity)
     k = int(300 / 2.0)
     sim_p = _smooth(res.power_w, k)
+    t_grid = np.arange(0.0, dur, 60.0)
+    occ = occupancy_curve(t_grid, peak=base.traffic.occ_peak)
     tgt_full = target_power_curve(np.interp(res.power_t, t_grid, occ), wls, shares,
                                   SERVER, N_PROVISIONED, N_PROVISIONED)
     tgt_p = _smooth(tgt_full, k)
@@ -50,12 +41,10 @@ def run(quick: bool = False) -> Bench:
     b.add("fig16/trace_replication_mape", f"MAPE={m:.3%} (paper: <3%)", us, m < 0.03)
 
     # +30% servers with POLCA: same shape, higher offset, larger spikes
-    n30 = int(round(N_PROVISIONED * 1.3))
     dur2 = dur if quick else WEEK  # shape comparison needs one week
-    reqs30 = generate_requests(dur2, n30, wls, shares, seed=23,
-                               occ_kwargs={"peak": 0.97})
-    res30 = RowSimulator(wls, SERVER, n30, N_PROVISIONED, PolcaPolicy(), reqs30,
-                         shares, SimConfig(), duration=dur2).run()
+    res30 = run_experiment(base.with_(duration_s=dur2)
+                               .with_fleet(added_frac=0.30)
+                               .with_policy("polca")).result
     base_w = res.power_w[: len(res30.power_w)]
     n = min(len(base_w), len(res30.power_w))
     sm0, sm30 = _smooth(base_w[:n], k), _smooth(res30.power_w[:n], k)

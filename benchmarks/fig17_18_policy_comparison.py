@@ -6,30 +6,27 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import Bench, N_PROVISIONED, SERVER, WEEK, bloom_workloads
-from repro.core.oversubscription import evaluate
-from repro.core.policy import NoCap, OneThreshold, PolcaPolicy
+from benchmarks.common import Bench, WEEK
+from repro.experiments import PolicySpec, get_scenario, run_experiment
 
 POLICIES = [
-    ("polca", PolcaPolicy),
-    ("1-thresh-low-pri", lambda: OneThreshold(cap_hp=False)),
-    ("1-thresh-all", lambda: OneThreshold(cap_hp=True)),
-    ("no-cap", NoCap),
+    ("polca", PolicySpec("polca")),
+    ("1-thresh-low-pri", PolicySpec("one-threshold", {"cap_hp": False})),
+    ("1-thresh-all", PolicySpec("one-threshold", {"cap_hp": True})),
+    ("no-cap", PolicySpec("no-cap")),
 ]
 
 
 def run(quick: bool = False) -> Bench:
     b = Bench()
-    wls, shares = bloom_workloads()
-    dur = WEEK / 14 if quick else WEEK / 2
-    n30 = int(round(N_PROVISIONED * 1.30))
+    base = get_scenario("fig17-comparison").with_(
+        duration_s=WEEK / 14 if quick else WEEK / 2)
 
     outcomes = {}
     for scale, tag in ([(1.0, "")] if quick else [(1.0, ""), (1.05, "+5%power")]):
-        for name, mk in POLICIES:
+        for name, spec in POLICIES:
             t0 = time.perf_counter()
-            o = evaluate(mk, wls, shares, SERVER, N_PROVISIONED, n30, dur,
-                         power_scale=scale)
+            o = run_experiment(base.with_(policy=spec, power_scale=scale))
             us = (time.perf_counter() - t0) * 1e6
             s = o.stats.summary()
             outcomes[(name, tag)] = o

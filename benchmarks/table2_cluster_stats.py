@@ -8,22 +8,16 @@ import time
 
 import numpy as np
 
-from benchmarks.common import Bench, N_PROVISIONED, SERVER, WEEK, bloom_workloads
-from repro.core.policy import NoCap
-from repro.core.simulator import RowSimulator, SimConfig
-from repro.core.traces import generate_requests
+from benchmarks.common import Bench, WEEK
+from repro.experiments import get_scenario, run_experiment
 
 
 def run(quick: bool = False) -> Bench:
     b = Bench()
-    dur = WEEK / 7 if quick else WEEK
-    wls, shares = bloom_workloads()
+    sc = get_scenario("table2-baseline").with_(
+        duration_s=WEEK / 7 if quick else WEEK)
     t0 = time.perf_counter()
-    reqs = generate_requests(dur, N_PROVISIONED, wls, shares, seed=11,
-                             occ_kwargs={"peak": 0.62})
-    sim = RowSimulator(wls, SERVER, N_PROVISIONED, N_PROVISIONED, NoCap(), reqs,
-                       shares, SimConfig(), duration=dur)
-    res = sim.run()
+    res = run_experiment(sc).result
     us = (time.perf_counter() - t0) * 1e6
 
     s2, s5, s40 = res.spike(2.0), res.spike(5.0), res.spike(40.0)

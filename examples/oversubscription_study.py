@@ -1,7 +1,8 @@
 """POLCA capacity study: how many servers can a fixed power budget host?
 
-Sweeps added-server fractions under Algorithm 1 on a production-style trace,
-prints the Fig-13-style frontier and the phase-aware (beyond-paper) extension.
+Sweeps added-server fractions under Algorithm 1 on a production-style trace
+via the declarative Scenario API, prints the Fig-13-style frontier, a
+multi-row cluster composition, and the phase-aware (beyond-paper) extension.
 
   PYTHONPATH=src python examples/oversubscription_study.py [--hours 6]
 """
@@ -13,35 +14,54 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config
-from repro.core.oversubscription import evaluate
 from repro.core.phase_aware import sweep
-from repro.core.policy import NoCap, PolcaPolicy
 from repro.core.power_model import A100, ServerPower
-from repro.core.traces import build_workload_classes
 from repro.core.workload import request_timing
+from repro.experiments import FleetSpec, PolicySpec, Scenario, run_experiment
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--hours", type=float, default=6.0)
     ap.add_argument("--provisioned", type=int, default=40)
+    ap.add_argument("--cluster-rows", type=int, default=0,
+                    help="also run an N-row cluster at +30% (0 = skip)")
     args = ap.parse_args()
     dur = args.hours * 3600.0
     server = ServerPower(A100)
-    wls, shares = build_workload_classes("bloom-176b", server)
 
     print(f"row: {args.provisioned} provisioned DGX-class servers, "
           f"{args.provisioned * server.provisioned_w / 1e3:.0f} kW budget")
     print(f"{'added':>7} {'policy':>8} {'peak':>6} {'brakes':>6} {'HP p99':>8} "
           f"{'LP p99':>8} {'SLO':>5}")
     for add in [0.0, 0.20, 0.30, 0.40]:
-        n = int(round(args.provisioned * (1 + add)))
-        for name, mk in [("no-cap", NoCap), ("polca", PolcaPolicy)]:
-            o = evaluate(mk, wls, shares, server, args.provisioned, n, dur)
+        for kind in ["no-cap", "polca"]:
+            sc = Scenario(
+                name=f"study-{kind}-{add:.0%}",
+                duration_s=dur,
+                fleet=FleetSpec(n_provisioned=args.provisioned, added_frac=add),
+                policy=PolicySpec(kind),
+            )
+            o = run_experiment(sc)
             s = o.stats.summary()
-            print(f"{add:>6.0%} {name:>8} {o.result.peak_power_frac:>6.2f} "
+            print(f"{add:>6.0%} {kind:>8} {o.result.peak_power_frac:>6.2f} "
                   f"{o.result.n_brakes:>6} {s['hp_p99']:>8.2%} {s['lp_p99']:>8.2%} "
                   f"{'yes' if o.meets else 'NO':>5}")
+
+    if args.cluster_rows:
+        sc = Scenario(
+            name="study-cluster",
+            duration_s=dur,
+            fleet=FleetSpec(n_provisioned=args.provisioned, added_frac=0.30,
+                            n_rows=args.cluster_rows, rows_per_rack=2),
+            policy=PolicySpec("polca"),
+            compare_to_reference=False,
+        )
+        o = run_experiment(sc)
+        c = o.cluster
+        print(f"\ncluster: {c.n_rows} rows x {sc.fleet.n_servers} servers "
+              f"(+30% each) -> peak {c.peak_cluster_frac:.1%} of cluster budget, "
+              f"{c.n_brakes} brakes, 40s spike {c.spike(40.0):.3f}")
 
     print("\nbeyond-paper: phase-aware token-phase down-clock (zero TTFT impact)")
     timing = request_timing(get_config("bloom-176b"), 2048, 1, server)

@@ -18,14 +18,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.core.oversubscription import evaluate
-from repro.core.policy import PolcaPolicy
 from repro.core.power_model import A100, ServerPower
-from repro.core.traces import build_workload_classes
 from repro.core.workload import request_timing
 from repro.data.pipeline import DataConfig, SyntheticTokenPipeline, device_put_batch
+from repro.experiments import get_scenario, run_experiment
 from repro.launch.inputs import make_rules
-from repro.launch.mesh import make_local_mesh
+from repro.launch.mesh import make_local_mesh, set_mesh
 from repro.launch.serve import ServeEngine
 from repro.launch.steps import build_train_step
 from repro.models import model as model_mod
@@ -40,13 +38,13 @@ shape = ShapeConfig("quickstart", 64, 4, "train")
 rules = make_rules(cfg, shape, mesh)
 opt = make_optimizer(cfg.optimizer)
 pspecs = model_mod.model_specs(cfg, 1)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     state = {"params": init_params(pspecs, jax.random.key(0)),
              "opt": init_params(opt.init_specs(pspecs), jax.random.key(1))}
 pipe = SyntheticTokenPipeline(cfg, DataConfig(4, 64))
 step = jax.jit(build_train_step(cfg, mesh, rules, opt))
 losses = []
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     for i in range(10):
         state, metrics = step(state, device_put_batch(pipe.batch_at(i), mesh, rules))
         losses.append(float(metrics["loss"]))
@@ -65,9 +63,7 @@ t = request_timing(get_config("llama3.2-1b"), 2048, 8, server)
 print(f"[power] llama3.2-1b x8batch: prompt {t.prefill_point.power_at(server,1.0):.0f}W "
       f"(compute-bound) | token {t.token_point.power_at(server,1.0):.0f}W (memory-bound)")
 
-wls, shares = build_workload_classes("bloom-176b", server)
-o = evaluate(PolcaPolicy, wls, shares, server, n_provisioned=40,
-             n_servers=52, duration=3 * 3600.0)
+o = run_experiment(get_scenario("quickstart-plus30"))
 s = o.stats.summary()
 print(f"[polca] +30% servers: meets_SLO={o.meets} powerbrakes={o.result.n_brakes} "
       f"HP_p99={s['hp_p99']:.2%} LP_p99={s['lp_p99']:.2%} "

@@ -1,53 +1,58 @@
-"""Oversubscription capacity planning: threshold search + SLO gate (Fig 13).
+"""Back-compat shims over the experiments API (Fig 13 capacity planning).
 
-``evaluate`` runs a policy on a trace at N servers against the uncapped
-reference on the same trace; ``max_servers`` sweeps N upward until SLOs (or
-the no-powerbrake constraint) break.
+The experiment workflow that used to live here — budget calibration,
+reference-vs-policy evaluation, threshold search — moved to
+``repro.experiments.runner`` behind the declarative ``Scenario`` API
+(DESIGN.md §8). These wrappers keep the old positional signatures working:
+``evaluate(...)`` builds the equivalent ``Scenario`` and delegates to
+``run_experiment``; results are identical bit-for-bit on the same seed.
+
+New code should construct a ``Scenario`` and call
+``repro.experiments.run_experiment`` directly.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
-import numpy as np
-
-from repro.core.policy import NoCap, PolcaPolicy
 from repro.core.power_model import ServerPower
-from repro.core.simulator import Request, RowSimulator, SimConfig, SimResult
-from repro.core.slo import DEFAULT_SLO, SLO, LatencyStats, impact_vs_reference, meets_slo
-from repro.core.traces import generate_requests
+from repro.core.simulator import SimConfig
+from repro.core.slo import DEFAULT_SLO, SLO
+from repro.experiments.runner import BASELINE_PEAK_UTIL  # noqa: F401 (re-export)
+from repro.experiments.runner import ExperimentResult
+from repro.experiments.runner import calibrated_budget  # noqa: F401 (re-export)
+from repro.experiments.runner import run_experiment
+from repro.experiments.runner import threshold_search as _threshold_search
+from repro.experiments.scenario import (
+    FleetSpec,
+    Scenario,
+    TelemetryConfig,
+    TrafficSpec,
+)
+
+# the old result type is the new one under its old name
+EvalOutcome = ExperimentResult
 
 
-@dataclass
-class EvalOutcome:
-    n_servers: int
-    added_frac: float
-    stats: LatencyStats
-    result: SimResult
-    ref_result: SimResult
-    meets: bool
-    throughput_ratio_hp: float
-    throughput_ratio_lp: float
-
-
-BASELINE_PEAK_UTIL = 0.79  # Table 2: inference rows peak at 79% of provisioned
-
-
-def calibrated_budget(workloads, shares, server, n_provisioned: int,
-                      duration: float, *, seed: int = 7, occ_peak: float = 0.62,
-                      power_scale: float = 1.0) -> float:
-    """Row power budget such that the n_provisioned baseline peaks at 79% of
-    it (the paper's Table-2 operating point — budgets are PDU limits, not the
-    sum of server ratings)."""
-    reqs = generate_requests(duration, n_provisioned, workloads, shares, seed=seed,
-                             occ_kwargs={"peak": occ_peak})
-    base = RowSimulator(workloads, server, n_provisioned, 100 * n_provisioned,
-                        NoCap(), reqs, shares,
-                        SimConfig(power_scale=power_scale, record_power=False),
-                        duration=duration).run()
-    peak_w = base.peak_power_frac * 100 * n_provisioned * server.provisioned_w
-    return peak_w / BASELINE_PEAK_UTIL
+def _scenario_from_args(name: str, n_provisioned: int, n_servers: int,
+                        duration: float, *, seed: int, power_scale: float,
+                        occ_peak: float, slo: SLO, sim_cfg: Optional[SimConfig],
+                        provisioned_w: Optional[float]) -> Scenario:
+    cfg = sim_cfg or SimConfig()
+    return Scenario(
+        name=name,
+        duration_s=duration,
+        fleet=FleetSpec(n_provisioned=n_provisioned,
+                        added_frac=n_servers / n_provisioned - 1.0),
+        traffic=TrafficSpec(occ_peak=occ_peak),
+        telemetry=TelemetryConfig(telemetry_s=cfg.telemetry_s,
+                                  oob_latency_s=cfg.oob_latency_s,
+                                  brake_latency_s=cfg.brake_latency_s),
+        slo=slo,
+        power_scale=power_scale,
+        seed=seed,
+        budget="calibrated" if provisioned_w is None else float(provisioned_w),
+    )
 
 
 def evaluate(policy_factory: Callable, workloads, shares, server: ServerPower,
@@ -55,68 +60,26 @@ def evaluate(policy_factory: Callable, workloads, shares, server: ServerPower,
              *, seed: int = 7, power_scale: float = 1.0, occ_peak: float = 0.62,
              slo: SLO = DEFAULT_SLO, sim_cfg: SimConfig = None,
              provisioned_w: float = None) -> EvalOutcome:
-    reqs = generate_requests(duration, n_servers, workloads, shares, seed=seed,
-                             occ_kwargs={"peak": occ_peak})
-    prios = {r.rid: r.priority for r in reqs}
-    base_cfg = sim_cfg or SimConfig()
-    if provisioned_w is None:
-        provisioned_w = calibrated_budget(workloads, shares, server, n_provisioned,
-                                          min(duration, 2 * 86400.0), seed=seed,
-                                          occ_peak=occ_peak, power_scale=1.0)
-
-    # uncapped reference (infinite power budget: never brakes, never caps)
-    ref = RowSimulator(workloads, server, n_servers, 10 * n_servers, NoCap(), reqs,
-                       shares, SimConfig(power_scale=power_scale,
-                                         record_power=False), duration=duration).run()
-    cfgd = SimConfig(power_scale=power_scale,
-                     telemetry_s=base_cfg.telemetry_s,
-                     oob_latency_s=base_cfg.oob_latency_s,
-                     brake_latency_s=base_cfg.brake_latency_s)
-    res = RowSimulator(workloads, server, n_servers, n_provisioned,
-                       policy_factory(), reqs, shares, cfgd, duration=duration,
-                       provisioned_w=provisioned_w).run()
-    stats = impact_vs_reference(res.latencies, ref.latencies, prios)
-
-    def tput(res_, prio):
-        tot = sum(r.out_tokens for r in reqs if prios[r.rid] == prio)
-        got = sum(r.out_tokens for r in reqs
-                  if prios[r.rid] == prio and r.rid in res_.latencies)
-        return got / max(1, tot)
-
-    ok = meets_slo(stats, res.n_brakes, slo)
-    return EvalOutcome(
-        n_servers=n_servers,
-        added_frac=n_servers / n_provisioned - 1.0,
-        stats=stats, result=res, ref_result=ref, meets=ok,
-        throughput_ratio_hp=tput(res, "high") / max(1e-9, tput(ref, "high")),
-        throughput_ratio_lp=tput(res, "low") / max(1e-9, tput(ref, "low")),
-    )
+    """Legacy signature: runs a policy on a trace at N servers against the
+    uncapped reference on the same trace. Delegates to ``run_experiment``."""
+    sc = _scenario_from_args("legacy-evaluate", n_provisioned, n_servers, duration,
+                             seed=seed, power_scale=power_scale, occ_peak=occ_peak,
+                             slo=slo, sim_cfg=sim_cfg, provisioned_w=provisioned_w)
+    return run_experiment(sc, workloads=(workloads, shares),
+                          policy_factory=policy_factory, server=server)
 
 
 def threshold_search(combos: List[Tuple[float, float]], workloads, shares, server,
                      n_provisioned: int, duration: float,
                      added_grid: List[float], **kw) -> Dict[Tuple[float, float], dict]:
-    """Fig 13: per (T1,T2), the max added-server fraction that (a) avoids
-    powerbrakes and (b) meets SLOs."""
-    out = {}
-    budget = calibrated_budget(workloads, shares, server, n_provisioned,
-                               min(duration, 2 * 86400.0),
-                               seed=kw.get("seed", 7),
-                               occ_peak=kw.get("occ_peak", 0.62))
-    kw = dict(kw, provisioned_w=budget)
-    for (t1, t2) in combos:
-        rows = []
-        max_no_brake = 0.0
-        max_slo = 0.0
-        for add in added_grid:
-            n = int(round(n_provisioned * (1 + add)))
-            o = evaluate(lambda: PolcaPolicy(t1=t1, t2=t2), workloads, shares,
-                         server, n_provisioned, n, duration, **kw)
-            rows.append((add, o))
-            if o.result.n_brakes == 0:
-                max_no_brake = max(max_no_brake, add)
-            if o.meets:
-                max_slo = max(max_slo, add)
-        out[(t1, t2)] = {"rows": rows, "max_added_no_brake": max_no_brake,
-                         "max_added_slo": max_slo}
-    return out
+    """Legacy signature for the Fig-13 (T1,T2) sweep."""
+    sc = _scenario_from_args("legacy-threshold-search", n_provisioned,
+                             n_provisioned, duration,
+                             seed=kw.get("seed", 7),
+                             power_scale=kw.get("power_scale", 1.0),
+                             occ_peak=kw.get("occ_peak", 0.62),
+                             slo=kw.get("slo", DEFAULT_SLO),
+                             sim_cfg=kw.get("sim_cfg"),
+                             provisioned_w=kw.get("provisioned_w"))
+    return _threshold_search(sc, combos, added_grid,
+                             workloads=(workloads, shares), server=server)

@@ -4,6 +4,10 @@ The controller consumes *delayed* row-power telemetry and emits frequency-cap
 commands that take effect after the out-of-band latency (Table 1). It is a
 pure state machine: the simulator (or a real rack manager) owns time.
 
+Policies implement the structured protocol ``observe(Telemetry)`` (see
+``core.telemetry``); the legacy ``step(p: float)`` survives as a shim that
+wraps the bare row-power fraction, so old traces replay bit-identically.
+
 Power modes (Table 3, A100 MHz normalized to 1410):
   | mode        | low priority        | high priority       |
   | uncapped    | uncapped            | uncapped            |
@@ -24,6 +28,7 @@ from repro.core.power_model import (
     FREQ_LP_T2,
     FREQ_UNCAPPED,
 )
+from repro.core.telemetry import Telemetry, TelemetryPolicy
 
 
 @dataclass(frozen=True)
@@ -36,7 +41,7 @@ class CapCommand:
 
 
 @dataclass
-class PolcaPolicy:
+class PolcaPolicy(TelemetryPolicy):
     """Dual-threshold, priority-aware frequency capping with hysteresis."""
 
     t1: float = 0.80  # thresholds as fractions of provisioned row power
@@ -62,8 +67,9 @@ class PolcaPolicy:
 
     name: str = "polca"
 
-    def step(self, p: float) -> List[CapCommand]:
-        """One telemetry sample (p = row power / provisioned). Algorithm 1."""
+    def observe(self, tel: Telemetry) -> List[CapCommand]:
+        """One telemetry sample. Algorithm 1 over ``tel.power_frac``."""
+        p = tel.power_frac
         cmds: List[CapCommand] = []
         if p > 1.0:
             if not self.braked:
@@ -109,7 +115,64 @@ class PolcaPolicy:
 
 
 @dataclass
-class OneThreshold:
+class PredictivePolcaPolicy(PolcaPolicy):
+    """Telemetry-enabled POLCA variant (beyond paper, enabled by the richer
+    protocol):
+
+    * **predictive capping** — least-squares slope over the last ``window``
+      samples extrapolates row power ``horizon_s`` ahead (default = the 40 s
+      out-of-band actuation latency, Table 1) and caps on the *predicted*
+      crossing, so caps land when the threshold is actually reached instead
+      of 40 s late;
+    * **informed escalation** — the per-priority power split tells the
+      controller when LP capping *cannot* shed enough power (LP share smaller
+      than the excess over T2), so it escalates to the HP cap immediately
+      instead of waiting ``escalation_ticks`` for the LP cap to verifiably
+      fail.
+
+    The powerbrake path is never predicted: brakes fire on measured overload
+    only, so ``n_brakes`` keeps its physical meaning.
+    """
+
+    horizon_s: float = 40.0
+    window: int = 8
+    name: str = "polca-predictive"
+    _hist_t: List[float] = field(default_factory=list)
+    _hist_p: List[float] = field(default_factory=list)
+
+    def _predict(self, t: float, p: float) -> float:
+        self._hist_t.append(t)
+        self._hist_p.append(p)
+        if len(self._hist_t) > self.window:
+            del self._hist_t[0]
+            del self._hist_p[0]
+        if len(self._hist_t) < 3:
+            return p
+        tm = sum(self._hist_t) / len(self._hist_t)
+        pm = sum(self._hist_p) / len(self._hist_p)
+        num = sum((ti - tm) * (pi - pm) for ti, pi in zip(self._hist_t, self._hist_p))
+        den = sum((ti - tm) ** 2 for ti in self._hist_t)
+        if den <= 0.0:
+            return p
+        slope = num / den
+        return max(p, p + slope * self.horizon_s)
+
+    def observe(self, tel: Telemetry) -> List[CapCommand]:
+        p = tel.power_frac
+        p_eff = self._predict(tel.t, p)
+        if p <= 1.0:
+            # prediction may cap early but must never fake a powerbrake
+            p_eff = min(p_eff, 1.0 - 1e-9)
+        if (tel.lp_power_frac is not None and self.t2_capped and not self.hp_capped
+                and p > self.t2 and tel.lp_power_frac < p - self.t2):
+            # even shutting LP off entirely cannot bring the row below T2:
+            # skip the wait-and-verify loop and cap HP on the next decision
+            self._t2_since = self.escalation_ticks
+        return super().observe(replace(tel, power_frac=p_eff))
+
+
+@dataclass
+class OneThreshold(TelemetryPolicy):
     """Baselines: single threshold at ``t`` (Fig. 17): cap LP only or all."""
 
     t: float = 0.89
@@ -126,7 +189,8 @@ class OneThreshold:
     def name(self) -> str:
         return "1-thresh-all" if self.cap_hp else "1-thresh-low-pri"
 
-    def step(self, p: float) -> List[CapCommand]:
+    def observe(self, tel: Telemetry) -> List[CapCommand]:
+        p = tel.power_frac
         cmds: List[CapCommand] = []
         if p > 1.0:
             if not self.braked:
@@ -151,7 +215,7 @@ class OneThreshold:
 
 
 @dataclass
-class NoCap:
+class NoCap(TelemetryPolicy):
     """No-cap baseline (with the hardware powerbrake as the only backstop)."""
 
     brake_freq: float = FREQ_BRAKE
@@ -159,7 +223,8 @@ class NoCap:
     n_brakes: int = 0
     name: str = "no-cap"
 
-    def step(self, p: float) -> List[CapCommand]:
+    def observe(self, tel: Telemetry) -> List[CapCommand]:
+        p = tel.power_frac
         if p > 1.0:
             if not self.braked:
                 self.braked = True

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core.power_model import FREQ_UNCAPPED, ServerPower
 from repro.core.slo import LatencyStats
+from repro.core.telemetry import Telemetry, dispatch
 from repro.core.workload import RequestTiming
 
 
@@ -85,7 +86,8 @@ class SimResult:
 
 class _Server:
     __slots__ = ("idx", "wl", "priority", "state", "queue", "cur", "work_left",
-                 "epoch", "freq", "t_service_start", "power_w", "t_last")
+                 "epoch", "freq", "t_service_start", "power_w", "t_last",
+                 "power_state")
 
     def __init__(self, idx, wl, priority):
         self.idx = idx
@@ -100,6 +102,7 @@ class _Server:
         self.t_service_start = 0.0
         self.power_w = 0.0
         self.t_last = 0.0
+        self.power_state = "idle"  # state the power buckets last attributed
 
 
 class RowSimulator:
@@ -107,7 +110,7 @@ class RowSimulator:
                  n_servers: int, n_provisioned: int, policy, requests: List[Request],
                  wl_server_share: List[float], sim_cfg: SimConfig = None,
                  duration: float = None, rng_seed: int = 0,
-                 provisioned_w: float = None):
+                 provisioned_w: float = None, row_index: int = 0):
         self.workloads = workloads
         self.sp = server_power
         self.policy = policy
@@ -116,6 +119,10 @@ class RowSimulator:
         self.requests = requests
         self.duration = duration or (requests[-1].t_arrival + 600 if requests else 600)
         self.rng = np.random.default_rng(rng_seed)
+        self.row_index = row_index
+        # filled in by ClusterSimulator before each lockstep tick (one tick
+        # stale — rack managers aggregate with delay); None on standalone rows
+        self.group_fracs: Tuple[Optional[float], Optional[float]] = (None, None)
 
         # dedicate servers to workload classes per the Table-4 share
         self.servers: List[_Server] = []
@@ -136,8 +143,13 @@ class RowSimulator:
                 idx += 1
 
         self.row_power = sum(self._server_power(s) for s in self.servers)
+        self.prio_power = {"high": 0.0, "low": 0.0}
+        self.phase_power = {"idle": 0.0, "prefill": 0.0, "decode": 0.0}
         for s in self.servers:
             s.power_w = self._server_power(s)
+            s.power_state = s.state
+            self.prio_power[s.priority] += s.power_w
+            self.phase_power[s.state] += s.power_w
 
         self.lp_freq = FREQ_UNCAPPED
         self.hp_freq = FREQ_UNCAPPED
@@ -149,6 +161,9 @@ class RowSimulator:
         self._power_integral = 0.0
         self._last_power_t = 0.0
         self._peak = 0.0
+        self._t = 0.0
+        self._started = False
+        self._past_end = False
 
     # ------------------------------------------------------------------
     def _push(self, t, kind, args=()):
@@ -168,9 +183,13 @@ class RowSimulator:
 
     def _update_power(self, s: _Server, t: float):
         new_p = self._server_power(s)
-        if new_p != s.power_w:
+        if new_p != s.power_w or s.state != s.power_state:
             self._account_power(t)
             self.row_power += new_p - s.power_w
+            self.prio_power[s.priority] += new_p - s.power_w
+            self.phase_power[s.power_state] -= s.power_w
+            self.phase_power[s.state] += new_p
+            s.power_state = s.state
             s.power_w = new_p
             self._peak = max(self._peak, self.row_power)
 
@@ -208,85 +227,46 @@ class RowSimulator:
 
     # ------------------------------------------------------------------
     def run(self) -> SimResult:
+        """Standalone run: start, drain every event, finalize."""
+        self.start()
+        self.advance_to(self.duration)
+        return self.finalize()
+
+    def start(self):
+        """Seed the event queue. Idempotent so run() after start() is safe."""
+        if self._started:
+            return
+        self._started = True
         for r in self.requests:
             self._push(r.t_arrival, "arrival", (r,))
         self._push(self.cfg.telemetry_s, "telemetry", ())
-        res = self.result
-        t = 0.0
+
+    def advance_to(self, t_target: float) -> bool:
+        """Process every event with t <= min(t_target, duration). Returns
+        False once the row is past its duration (no more work will happen).
+
+        ``run()`` is exactly ``advance_to(duration)``; ClusterSimulator calls
+        this tick-by-tick to lockstep N rows, which therefore reproduces the
+        standalone event sequence bit-for-bit."""
+        if self._past_end:
+            return False
         while self.events:
-            t, _, kind, args = heapq.heappop(self.events)
+            item = heapq.heappop(self.events)
+            t = item[0]
             if t > self.duration:
-                break
-            if kind == "arrival":
-                (req,) = args
-                # route within the workload class AND the request's priority
-                # pool: HP requests must not land on LP-capped servers
-                cands = [s for s in self.by_wl[req.wl] if s.priority == req.priority]
-                if not cands:
-                    cands = self.by_wl[req.wl]
-                idle = [s for s in cands if s.state == "idle"]
-                buf = [s for s in cands if s.state != "idle" and len(s.queue) < 1]
-                if idle:
-                    s = idle[int(self.rng.integers(len(idle)))]
-                    s.queue.append(req)
-                    self._start_next(s, t)
-                elif buf:
-                    s = min(buf, key=lambda x: len(x.queue))
-                    s.queue.append(req)
-                else:
-                    res.n_dropped += 1
-            elif kind == "phase_end":
-                sid, epoch = args
-                s = self.servers[sid]
-                if epoch != s.epoch or s.state == "idle":
-                    continue  # stale event
-                if s.state == "prefill":
-                    s.state = "decode"
-                    wl = self.workloads[s.wl]
-                    s.work_left = s.cur.out_tokens * wl.timing.t_token
-                    s.epoch += 1
-                    self._schedule_phase_end(s, t)
-                    self._update_power(s, t)
-                else:
-                    req = s.cur
-                    wl = self.workloads[s.wl]
-                    # unqueued, uncapped ideal latency
-                    ideal = wl.timing.t_prefill + req.out_tokens * wl.timing.t_token
-                    actual = t - req.t_arrival
-                    res.latency.add(req.priority, actual, ideal)
-                    res.latencies[req.rid] = actual
-                    res.n_completed += 1
-                    res.served_tokens += req.out_tokens
-                    self._start_next(s, t)
-            elif kind == "telemetry":
-                p_frac = self.row_power / self.provisioned_w
-                for cmd in self.policy.step(p_frac):
-                    lat = self.cfg.brake_latency_s if cmd.brake else self.cfg.oob_latency_s
-                    self._push(t + lat, "apply", (cmd.lp_freq, cmd.hp_freq))
-                    res.cap_events += 1
-                if self.cfg.record_power:
-                    self._power_samples_t.append(t)
-                    self._power_samples_w.append(p_frac)
-                self._push(t + self.cfg.telemetry_s, "telemetry", ())
-            elif kind == "apply":
-                lp, hp = args
-                if lp is not None:
-                    self.lp_freq = lp
-                if hp is not None:
-                    self.hp_freq = hp
-                for s in self.servers:
-                    f = self.lp_freq if s.priority == "low" else self.hp_freq
-                    if f != s.freq:
-                        if s.state != "idle":
-                            # bank progress at the old rate, then re-plan
-                            s.work_left = max(
-                                0.0, s.work_left - (t - s.t_last) * self._rate(s))
-                            s.freq = f
-                            s.epoch += 1
-                            self._schedule_phase_end(s, t)
-                        else:
-                            s.freq = f
-                        self._update_power(s, t)
+                self._t = t  # matches the standalone loop's break-with-overshoot
+                self._past_end = True
+                return False
+            if t > t_target:
+                heapq.heappush(self.events, item)  # same eid: order preserved
+                return True
+            self._t = t
+            self._handle(t, item[2], item[3])
+        return False
+
+    def finalize(self) -> SimResult:
+        res = self.result
+        t = self._t
         self._account_power(t if t <= self.duration else self.duration)
         res.n_brakes = self.policy.n_brakes
         res.peak_power_frac = self._peak / self.provisioned_w
@@ -296,3 +276,93 @@ class RowSimulator:
             res.power_t = np.asarray(self._power_samples_t)
             res.power_w = np.asarray(self._power_samples_w)
         return res
+
+    def sample_telemetry(self, t: float) -> Telemetry:
+        """The structured controller sample at time t (see core.telemetry)."""
+        rack_frac, cluster_frac = self.group_fracs
+        return Telemetry(
+            t=t,
+            power_frac=self.row_power / self.provisioned_w,
+            hp_power_frac=self.prio_power["high"] / self.provisioned_w,
+            lp_power_frac=self.prio_power["low"] / self.provisioned_w,
+            prefill_power_frac=self.phase_power["prefill"] / self.provisioned_w,
+            lp_freq=self.lp_freq,
+            hp_freq=self.hp_freq,
+            braked=bool(getattr(self.policy, "braked", False)),
+            row_index=self.row_index,
+            rack_power_frac=rack_frac,
+            cluster_power_frac=cluster_frac,
+        )
+
+    def _handle(self, t: float, kind: str, args: tuple):
+        res = self.result
+        if kind == "arrival":
+            (req,) = args
+            # route within the workload class AND the request's priority
+            # pool: HP requests must not land on LP-capped servers
+            cands = [s for s in self.by_wl[req.wl] if s.priority == req.priority]
+            if not cands:
+                cands = self.by_wl[req.wl]
+            idle = [s for s in cands if s.state == "idle"]
+            buf = [s for s in cands if s.state != "idle" and len(s.queue) < 1]
+            if idle:
+                s = idle[int(self.rng.integers(len(idle)))]
+                s.queue.append(req)
+                self._start_next(s, t)
+            elif buf:
+                s = min(buf, key=lambda x: len(x.queue))
+                s.queue.append(req)
+            else:
+                res.n_dropped += 1
+        elif kind == "phase_end":
+            sid, epoch = args
+            s = self.servers[sid]
+            if epoch != s.epoch or s.state == "idle":
+                return  # stale event
+            if s.state == "prefill":
+                s.state = "decode"
+                wl = self.workloads[s.wl]
+                s.work_left = s.cur.out_tokens * wl.timing.t_token
+                s.epoch += 1
+                self._schedule_phase_end(s, t)
+                self._update_power(s, t)
+            else:
+                req = s.cur
+                wl = self.workloads[s.wl]
+                # unqueued, uncapped ideal latency
+                ideal = wl.timing.t_prefill + req.out_tokens * wl.timing.t_token
+                actual = t - req.t_arrival
+                res.latency.add(req.priority, actual, ideal)
+                res.latencies[req.rid] = actual
+                res.n_completed += 1
+                res.served_tokens += req.out_tokens
+                self._start_next(s, t)
+        elif kind == "telemetry":
+            tel = self.sample_telemetry(t)
+            for cmd in dispatch(self.policy, tel):
+                lat = self.cfg.brake_latency_s if cmd.brake else self.cfg.oob_latency_s
+                self._push(t + lat, "apply", (cmd.lp_freq, cmd.hp_freq))
+                res.cap_events += 1
+            if self.cfg.record_power:
+                self._power_samples_t.append(t)
+                self._power_samples_w.append(tel.power_frac)
+            self._push(t + self.cfg.telemetry_s, "telemetry", ())
+        elif kind == "apply":
+            lp, hp = args
+            if lp is not None:
+                self.lp_freq = lp
+            if hp is not None:
+                self.hp_freq = hp
+            for s in self.servers:
+                f = self.lp_freq if s.priority == "low" else self.hp_freq
+                if f != s.freq:
+                    if s.state != "idle":
+                        # bank progress at the old rate, then re-plan
+                        s.work_left = max(
+                            0.0, s.work_left - (t - s.t_last) * self._rate(s))
+                        s.freq = f
+                        s.epoch += 1
+                        self._schedule_phase_end(s, t)
+                    else:
+                        s.freq = f
+                    self._update_power(s, t)

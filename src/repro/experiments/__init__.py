@@ -1,0 +1,57 @@
+"""Unified Scenario/Experiment API for the POLCA power plane.
+
+Declare an experiment as a :class:`Scenario` (fleet x workload x policy x
+telemetry x seed), run it with :func:`run_experiment`, and read a structured
+:class:`ExperimentResult`. Multi-row fleets run under the hierarchical
+:class:`ClusterSimulator`; policies consume structured
+:class:`~repro.core.telemetry.Telemetry` samples. See DESIGN.md §8.
+"""
+
+from repro.core.telemetry import Telemetry, TelemetryPolicy, dispatch
+from repro.experiments.cluster import ClusterResult, ClusterSimulator
+from repro.experiments.runner import (
+    BASELINE_PEAK_UTIL,
+    ExperimentResult,
+    build_workloads,
+    calibrated_budget,
+    resolve_budget,
+    run_experiment,
+    threshold_search,
+)
+from repro.experiments.scenario import (
+    DAY,
+    WEEK,
+    FleetSpec,
+    PolicySpec,
+    Scenario,
+    TelemetryConfig,
+    TrafficSpec,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+)
+
+__all__ = [
+    "BASELINE_PEAK_UTIL",
+    "ClusterResult",
+    "ClusterSimulator",
+    "DAY",
+    "ExperimentResult",
+    "FleetSpec",
+    "PolicySpec",
+    "Scenario",
+    "Telemetry",
+    "TelemetryConfig",
+    "TelemetryPolicy",
+    "TrafficSpec",
+    "WEEK",
+    "build_workloads",
+    "calibrated_budget",
+    "dispatch",
+    "get_scenario",
+    "list_scenarios",
+    "register_scenario",
+    "resolve_budget",
+    "run_experiment",
+    "threshold_search",
+]

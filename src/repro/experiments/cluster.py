@@ -1,0 +1,136 @@
+"""Multi-row cluster simulation under hierarchical power budgets.
+
+``ClusterSimulator`` composes N :class:`~repro.core.simulator.RowSimulator`
+instances into a row -> rack -> cluster hierarchy. Rows keep their own event
+queues, policies, and budgets; the cluster layer locksteps them on the
+telemetry grid and, before each tick, publishes one-tick-stale rack/cluster
+power fractions into every row's ``group_fracs`` (a real rack manager
+aggregates with exactly this delay). Row policies therefore see the full
+hierarchical :class:`~repro.core.telemetry.Telemetry` sample; policies that
+ignore the group fields behave exactly as on a standalone row — a cluster run
+whose per-row budget equals the single-row budget reproduces the standalone
+``RowSimulator`` results bit-for-bit on the same trace.
+
+Power accounting is vectorized: per-tick row powers land in a [T, R] numpy
+array, and rack/cluster series are reductions over it.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.simulator import RowSimulator, SimResult
+
+
+@dataclass
+class ClusterResult:
+    row_results: List[SimResult]
+    power_t: np.ndarray = field(repr=False)  # [T] tick times
+    row_power_frac: np.ndarray = field(repr=False)  # [T, R] of each row budget
+    rack_power_frac: np.ndarray = field(repr=False)  # [T, n_racks]
+    cluster_power_frac: np.ndarray = field(repr=False)  # [T] of cluster budget
+    n_brakes: int = 0
+    peak_cluster_frac: float = 0.0
+    mean_cluster_frac: float = 0.0
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.row_results)
+
+    def spike(self, window_s: float) -> float:
+        """Max cluster-power rise (fraction of cluster budget) in any window."""
+        w = self.cluster_power_frac
+        if len(w) < 3:
+            return 0.0
+        dt = float(self.power_t[1] - self.power_t[0])
+        k = max(1, int(round(window_s / dt)))
+        diffs = w[k:] - w[:-k]
+        return float(diffs.max()) if len(diffs) else 0.0
+
+
+class ClusterSimulator:
+    """Lockstep N rows under row/rack/cluster budgets.
+
+    ``rack_budget_w``/``cluster_budget_w`` default to the sum of their
+    children's budgets (no extra oversubscription at the aggregation levels);
+    pass smaller values to model oversubscribed PDUs above the row.
+    """
+
+    def __init__(self, rows: List[RowSimulator], *, rows_per_rack: int = 2,
+                 rack_budget_w: Optional[List[float]] = None,
+                 cluster_budget_w: Optional[float] = None,
+                 telemetry_s: Optional[float] = None):
+        if not rows:
+            raise ValueError("ClusterSimulator needs at least one row")
+        self.rows = rows
+        self.rows_per_rack = max(1, rows_per_rack)
+        self.n_racks = math.ceil(len(rows) / self.rows_per_rack)
+        self.rack_of = np.asarray([i // self.rows_per_rack for i in range(len(rows))])
+        self.row_budget_w = np.asarray([r.provisioned_w for r in rows], float)
+        if rack_budget_w is None:
+            rack_budget_w = [float(self.row_budget_w[self.rack_of == k].sum())
+                             for k in range(self.n_racks)]
+        self.rack_budget_w = np.asarray(rack_budget_w, float)
+        self.cluster_budget_w = float(cluster_budget_w
+                                      if cluster_budget_w is not None
+                                      else self.rack_budget_w.sum())
+        self.telemetry_s = float(telemetry_s or rows[0].cfg.telemetry_s)
+
+    def _publish_group_fracs(self, row_w: np.ndarray):
+        rack_w = np.zeros(self.n_racks)
+        np.add.at(rack_w, self.rack_of, row_w)
+        rack_frac = rack_w / self.rack_budget_w
+        cluster_frac = float(row_w.sum() / self.cluster_budget_w)
+        for i, r in enumerate(self.rows):
+            r.group_fracs = (float(rack_frac[self.rack_of[i]]), cluster_frac)
+        return rack_frac, cluster_frac
+
+    def run(self) -> ClusterResult:
+        rows = self.rows
+        for r in rows:
+            r.start()
+        duration = max(r.duration for r in rows)
+        alive = [True] * len(rows)
+        t = self.telemetry_s
+        ticks: List[float] = []
+        samples: List[np.ndarray] = []
+        prev_row_w: Optional[np.ndarray] = None
+        while t <= duration and any(alive):
+            if prev_row_w is not None:
+                # one tick stale: what the rack manager aggregated last sample
+                self._publish_group_fracs(prev_row_w)
+            for i, r in enumerate(rows):
+                if alive[i]:
+                    alive[i] = r.advance_to(min(t, r.duration))
+            row_w = np.asarray([r.row_power for r in rows], float)
+            ticks.append(t)
+            samples.append(row_w)
+            prev_row_w = row_w
+            t += self.telemetry_s
+        for r in rows:  # drain any events between the last tick and duration
+            r.advance_to(r.duration)
+        row_results = [r.finalize() for r in rows]
+
+        power = (np.stack(samples) if samples
+                 else np.zeros((0, len(rows))))  # [T, R] watts
+        power_t = np.asarray(ticks)
+        row_frac = power / self.row_budget_w[None, :] if len(power) else power
+        rack_w = np.zeros((len(power), self.n_racks))
+        for k in range(self.n_racks):
+            rack_w[:, k] = power[:, self.rack_of == k].sum(axis=1)
+        rack_frac = rack_w / self.rack_budget_w[None, :] if len(power) else rack_w
+        cluster_frac = power.sum(axis=1) / self.cluster_budget_w
+        return ClusterResult(
+            row_results=row_results,
+            power_t=power_t,
+            row_power_frac=row_frac,
+            rack_power_frac=rack_frac,
+            cluster_power_frac=cluster_frac,
+            n_brakes=sum(rr.n_brakes for rr in row_results),
+            peak_cluster_frac=float(cluster_frac.max()) if len(cluster_frac) else 0.0,
+            mean_cluster_frac=float(cluster_frac.mean()) if len(cluster_frac) else 0.0,
+        )

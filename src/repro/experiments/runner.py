@@ -1,0 +1,238 @@
+"""Experiment execution: ``run_experiment(scenario)`` and sweeps.
+
+This is the single entrypoint the benchmarks and examples drive. It owns the
+workflow the old ``core.oversubscription.evaluate`` hard-coded behind eight
+positional arguments: build the Table-4 workload classes for the scenario's
+model/device, generate the seeded arrival trace, calibrate the row power
+budget to the paper's Table-2 operating point (unless the scenario pins it),
+run an uncapped reference plus the policy run (row or multi-row cluster), and
+gate the outcome against the SLOs.
+
+``core.oversubscription`` keeps thin shims over these functions so pre-
+redesign call signatures continue to work unchanged.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.policy import NoCap
+from repro.core.simulator import RowSimulator, SimConfig, SimResult, WorkloadClass
+from repro.core.slo import LatencyStats, impact_vs_reference, meets_slo
+from repro.core.traces import build_workload_classes, generate_requests
+from repro.experiments.cluster import ClusterResult, ClusterSimulator
+from repro.experiments.scenario import PolicySpec, Scenario
+
+BASELINE_PEAK_UTIL = 0.79  # Table 2: inference rows peak at 79% of provisioned
+
+
+@dataclass
+class ExperimentResult:
+    """Outcome of one scenario run (field-compatible with the old
+    ``EvalOutcome`` for the row path; cluster runs add ``cluster``)."""
+
+    n_servers: int
+    added_frac: float
+    stats: LatencyStats
+    result: SimResult  # policy run (row 0's result for cluster runs)
+    ref_result: Optional[SimResult]
+    meets: bool
+    throughput_ratio_hp: Optional[float]
+    throughput_ratio_lp: Optional[float]
+    scenario: Optional[Scenario] = None
+    budget_w: Optional[float] = None
+    cluster: Optional[ClusterResult] = None
+
+
+def build_workloads(scenario: Scenario) -> Tuple[List[WorkloadClass], List[float]]:
+    """Table-4 workload classes for the scenario's model/device, with the
+    scenario's priority-mix override applied (Fig. 15b sweeps)."""
+    server = scenario.fleet.server()
+    wls, shares = build_workload_classes(scenario.fleet.model, server)
+    mix = scenario.traffic.priority_mix_override
+    if mix is not None:
+        wls = [WorkloadClass(w.name, w.timing, mix) for w in wls]
+    return wls, shares
+
+
+def _sim_config(scenario: Scenario, **overrides) -> SimConfig:
+    tc = scenario.telemetry
+    kw = dict(power_scale=scenario.power_scale, telemetry_s=tc.telemetry_s,
+              oob_latency_s=tc.oob_latency_s, brake_latency_s=tc.brake_latency_s,
+              record_power=tc.record_power)
+    kw.update(overrides)
+    return SimConfig(**kw)
+
+
+def calibrated_budget(workloads, shares, server, n_provisioned: int,
+                      duration: float, *, seed: int = 7, occ_peak: float = 0.62,
+                      power_scale: float = 1.0) -> float:
+    """Row power budget such that the n_provisioned baseline peaks at 79% of
+    it (the paper's Table-2 operating point — budgets are PDU limits, not the
+    sum of server ratings)."""
+    reqs = generate_requests(duration, n_provisioned, workloads, shares, seed=seed,
+                             occ_kwargs={"peak": occ_peak})
+    base = RowSimulator(workloads, server, n_provisioned, 100 * n_provisioned,
+                        NoCap(), reqs, shares,
+                        SimConfig(power_scale=power_scale, record_power=False),
+                        duration=duration).run()
+    peak_w = base.peak_power_frac * 100 * n_provisioned * server.provisioned_w
+    return peak_w / BASELINE_PEAK_UTIL
+
+
+def resolve_budget(scenario: Scenario, workloads, shares, server) -> Optional[float]:
+    """The row budget in watts, or None for the nominal RowSimulator default
+    (n_provisioned x server rating)."""
+    if isinstance(scenario.budget, (int, float)):
+        return float(scenario.budget)
+    if scenario.budget == "nominal":
+        return None
+    if scenario.budget == "calibrated":
+        return calibrated_budget(
+            workloads, shares, server, scenario.fleet.n_provisioned,
+            min(scenario.duration_s, 2 * 86400.0), seed=scenario.seed,
+            occ_peak=scenario.traffic.occ_peak, power_scale=1.0)
+    raise ValueError(f"unknown budget spec {scenario.budget!r}")
+
+
+def run_experiment(scenario: Scenario, *,
+                   workloads: Optional[Tuple[List[WorkloadClass], List[float]]] = None,
+                   policy_factory=None, server=None) -> ExperimentResult:
+    """Run one scenario end to end.
+
+    ``workloads``, ``policy_factory``, and ``server`` are escape hatches for
+    legacy call sites that already built (non-declarative) workload classes,
+    pass a bare policy callable, or carry a custom ``ServerPower``;
+    everything else resolves from the scenario itself.
+    """
+    if scenario.duration_s <= 0:
+        raise ValueError(f"scenario {scenario.name!r}: duration_s must be > 0, "
+                         f"got {scenario.duration_s}")
+    server = server if server is not None else scenario.fleet.server()
+    wls, shares = workloads if workloads is not None else build_workloads(scenario)
+    budget_w = resolve_budget(scenario, wls, shares, server)
+    mk = policy_factory if policy_factory is not None else scenario.policy.build
+    if scenario.fleet.n_rows > 1:
+        return _run_cluster(scenario, wls, shares, server, budget_w, mk)
+    return _run_row(scenario, wls, shares, server, budget_w, mk)
+
+
+def _throughput(reqs, prios, res: SimResult, prio: str) -> float:
+    tot = sum(r.out_tokens for r in reqs if prios[r.rid] == prio)
+    got = sum(r.out_tokens for r in reqs
+              if prios[r.rid] == prio and r.rid in res.latencies)
+    return got / max(1, tot)
+
+
+def _run_row(scenario: Scenario, wls, shares, server,
+             budget_w: Optional[float], policy_factory) -> ExperimentResult:
+    fleet = scenario.fleet
+    n = fleet.n_servers
+    reqs = generate_requests(scenario.duration_s, n, wls, shares, seed=scenario.seed,
+                             occ_kwargs={"peak": scenario.traffic.occ_peak})
+    prios = {r.rid: r.priority for r in reqs}
+
+    ref = None
+    if scenario.compare_to_reference:
+        # uncapped reference (infinite power budget: never brakes, never caps)
+        ref = RowSimulator(wls, server, n, 10 * n, NoCap(), reqs, shares,
+                           SimConfig(power_scale=scenario.power_scale,
+                                     record_power=False),
+                           duration=scenario.duration_s).run()
+    res = RowSimulator(wls, server, n, fleet.n_provisioned, policy_factory(),
+                       reqs, shares, _sim_config(scenario),
+                       duration=scenario.duration_s, provisioned_w=budget_w).run()
+
+    if ref is not None:
+        stats = impact_vs_reference(res.latencies, ref.latencies, prios)
+        tr_hp = (_throughput(reqs, prios, res, "high")
+                 / max(1e-9, _throughput(reqs, prios, ref, "high")))
+        tr_lp = (_throughput(reqs, prios, res, "low")
+                 / max(1e-9, _throughput(reqs, prios, ref, "low")))
+    else:
+        stats, tr_hp, tr_lp = res.latency, None, None
+    return ExperimentResult(
+        n_servers=n,
+        added_frac=n / fleet.n_provisioned - 1.0,
+        stats=stats, result=res, ref_result=ref,
+        meets=meets_slo(stats, res.n_brakes, scenario.slo),
+        throughput_ratio_hp=tr_hp, throughput_ratio_lp=tr_lp,
+        scenario=scenario, budget_w=budget_w,
+    )
+
+
+def _run_cluster(scenario: Scenario, wls, shares, server,
+                 budget_w: Optional[float], policy_factory) -> ExperimentResult:
+    fleet = scenario.fleet
+    n = fleet.n_servers
+    rows = []
+    traces = []
+    for i in range(fleet.n_rows):
+        # each row gets its own arrival trace (decorrelated diurnal noise)
+        reqs = generate_requests(scenario.duration_s, n, wls, shares,
+                                 seed=scenario.seed + i,
+                                 occ_kwargs={"peak": scenario.traffic.occ_peak})
+        traces.append(reqs)
+        rows.append(RowSimulator(wls, server, n, fleet.n_provisioned,
+                                 policy_factory(), reqs, shares,
+                                 _sim_config(scenario),
+                                 duration=scenario.duration_s,
+                                 provisioned_w=budget_w, row_index=i))
+    cres = ClusterSimulator(rows, rows_per_rack=fleet.rows_per_rack,
+                            telemetry_s=scenario.telemetry.telemetry_s).run()
+    if scenario.compare_to_reference:
+        # per-row uncapped references on the same traces, merged cluster-wide
+        stats = LatencyStats()
+        for reqs, rr in zip(traces, cres.row_results):
+            ref = RowSimulator(wls, server, n, 10 * n, NoCap(), reqs, shares,
+                               SimConfig(power_scale=scenario.power_scale,
+                                         record_power=False),
+                               duration=scenario.duration_s).run()
+            st = impact_vs_reference(rr.latencies, ref.latencies,
+                                     {r.rid: r.priority for r in reqs})
+            stats.hp_impacts.extend(st.hp_impacts)
+            stats.lp_impacts.extend(st.lp_impacts)
+    else:
+        stats = LatencyStats(
+            hp_impacts=[x for rr in cres.row_results for x in rr.latency.hp_impacts],
+            lp_impacts=[x for rr in cres.row_results for x in rr.latency.lp_impacts])
+    return ExperimentResult(
+        n_servers=n * fleet.n_rows,
+        added_frac=n / fleet.n_provisioned - 1.0,
+        stats=stats, result=cres.row_results[0], ref_result=None,
+        meets=meets_slo(stats, cres.n_brakes, scenario.slo),
+        throughput_ratio_hp=None, throughput_ratio_lp=None,
+        scenario=scenario, budget_w=budget_w, cluster=cres,
+    )
+
+
+def threshold_search(base: Scenario, combos: Sequence[Tuple[float, float]],
+                     added_grid: Sequence[float], *,
+                     workloads=None, server=None) -> Dict[Tuple[float, float], dict]:
+    """Fig 13: per (T1,T2), the max added-server fraction that (a) avoids
+    powerbrakes and (b) meets SLOs. The budget is calibrated once from the
+    base scenario and pinned across the sweep."""
+    server = server if server is not None else base.fleet.server()
+    wls, shares = workloads if workloads is not None else build_workloads(base)
+    budget = resolve_budget(base, wls, shares, server)
+    if budget is None:  # "nominal": pin the explicit equivalent
+        budget = base.fleet.n_provisioned * server.provisioned_w
+    out = {}
+    for (t1, t2) in combos:
+        rows = []
+        max_no_brake = 0.0
+        max_slo = 0.0
+        for add in added_grid:
+            sc = (base.with_fleet(added_frac=add)
+                      .with_policy("polca", t1=t1, t2=t2)
+                      .with_(budget=budget))
+            o = run_experiment(sc, workloads=(wls, shares), server=server)
+            rows.append((add, o))
+            if o.result.n_brakes == 0:
+                max_no_brake = max(max_no_brake, add)
+            if o.meets:
+                max_slo = max(max_slo, add)
+        out[(t1, t2)] = {"rows": rows, "max_added_no_brake": max_no_brake,
+                         "max_added_slo": max_slo}
+    return out

@@ -1,0 +1,222 @@
+"""Declarative experiment specification (the `Scenario` API).
+
+A ``Scenario`` is a serializable description of one POLCA experiment: fleet
+composition (rows x servers, model, device), workload mix knobs, the policy
+to run (by name + params, so it round-trips through JSON), telemetry/latency
+constants, SLOs, seeds, and how the row power budget is set. It replaces the
+sprawling positional signatures of the old ``core.oversubscription.evaluate``
+— every benchmark, example, and sweep constructs a ``Scenario`` and hands it
+to :func:`repro.experiments.runner.run_experiment`.
+
+Named scenarios live in a registry (``get_scenario`` / ``register_scenario``)
+so figures, tests, and the CLI can share exact configurations by name.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Union
+
+from repro.core.policy import NoCap, OneThreshold, PolcaPolicy, PredictivePolcaPolicy
+from repro.core.power_model import A100, TPU_V5E, DevicePower, ServerPower
+from repro.core.slo import DEFAULT_SLO, SLO
+
+DAY = 86_400.0
+WEEK = 7 * DAY
+
+DEVICE_PROFILES: Dict[str, DevicePower] = {
+    A100.name: A100,
+    TPU_V5E.name: TPU_V5E,
+}
+
+POLICY_BUILDERS: Dict[str, Callable[..., Any]] = {
+    "polca": PolcaPolicy,
+    "polca-predictive": PredictivePolcaPolicy,
+    "one-threshold": OneThreshold,
+    "no-cap": NoCap,
+}
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    """A policy by registry name + constructor params (JSON-serializable)."""
+
+    kind: str = "polca"
+    params: Dict[str, Any] = field(default_factory=dict)
+
+    def build(self):
+        """A fresh (stateless) policy instance for one simulation run."""
+        return POLICY_BUILDERS[self.kind](**self.params)
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """What hardware hosts the experiment, and how oversubscribed it is."""
+
+    n_provisioned: int = 40  # servers the row budget was provisioned for
+    added_frac: float = 0.0  # oversubscription: the row hosts (1+added) * n
+    n_rows: int = 1  # >1: ClusterSimulator composes rows
+    rows_per_rack: int = 2
+    model: str = "bloom-176b"
+    device: str = A100.name
+    n_devices_per_server: int = 8
+
+    @property
+    def n_servers(self) -> int:
+        return int(round(self.n_provisioned * (1.0 + self.added_frac)))
+
+    def server(self) -> ServerPower:
+        return ServerPower(DEVICE_PROFILES[self.device],
+                           n_devices=self.n_devices_per_server)
+
+
+@dataclass(frozen=True)
+class TrafficSpec:
+    """Workload-mix knobs over the Table-4 classes."""
+
+    occ_peak: float = 0.62  # diurnal occupancy peak (busy-server fraction)
+    priority_mix_override: Optional[float] = None  # force every class's HP mix
+
+
+@dataclass(frozen=True)
+class TelemetryConfig:
+    """Controller-plane constants (paper Table 1)."""
+
+    telemetry_s: float = 2.0
+    oob_latency_s: float = 40.0
+    brake_latency_s: float = 5.0
+    record_power: bool = True
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One fully-specified experiment. Immutable; vary with ``with_()``."""
+
+    name: str
+    duration_s: float
+    fleet: FleetSpec = field(default_factory=FleetSpec)
+    policy: PolicySpec = field(default_factory=PolicySpec)
+    traffic: TrafficSpec = field(default_factory=TrafficSpec)
+    telemetry: TelemetryConfig = field(default_factory=TelemetryConfig)
+    slo: SLO = DEFAULT_SLO
+    power_scale: float = 1.0  # robustness runs: x1.05 = +5% workload power
+    seed: int = 7
+    # row power budget: "calibrated" (Table-2 79%-peak operating point),
+    # "nominal" (n_provisioned x server rating), or explicit watts
+    budget: Union[str, float] = "calibrated"
+    compare_to_reference: bool = True  # diff latencies vs an uncapped run
+
+    def with_(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+    def with_fleet(self, **kw) -> "Scenario":
+        return self.with_(fleet=dataclasses.replace(self.fleet, **kw))
+
+    def with_policy(self, kind: str, **params) -> "Scenario":
+        return self.with_(policy=PolicySpec(kind, params))
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        d = dict(d)
+        d["fleet"] = FleetSpec(**d.get("fleet", {}))
+        d["policy"] = PolicySpec(**d.get("policy", {}))
+        d["traffic"] = TrafficSpec(**d.get("traffic", {}))
+        d["telemetry"] = TelemetryConfig(**d.get("telemetry", {}))
+        d["slo"] = SLO(**d.get("slo", {}))
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Scenario":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register_scenario(scenario: Scenario, *, overwrite: bool = False) -> Scenario:
+    if scenario.name in _REGISTRY and not overwrite:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown scenario {name!r}; registered: {known}") from None
+
+
+def list_scenarios() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# Named configurations shared by benchmarks, examples, and tests. Benchmarks
+# shorten durations in --quick mode via ``with_()``.
+register_scenario(Scenario(
+    name="table2-baseline",
+    duration_s=WEEK,
+    policy=PolicySpec("no-cap"),
+    seed=11,
+    budget="nominal",
+    compare_to_reference=False,
+))
+register_scenario(Scenario(
+    name="fig13-search-base",
+    duration_s=WEEK / 2,
+    fleet=FleetSpec(added_frac=0.30),
+))
+register_scenario(Scenario(
+    name="fig14-plus30",
+    duration_s=WEEK / 2,
+    fleet=FleetSpec(added_frac=0.30),
+))
+register_scenario(Scenario(
+    name="fig16-six-week",
+    duration_s=6 * WEEK,
+    policy=PolicySpec("no-cap"),
+    traffic=TrafficSpec(occ_peak=0.97),
+    seed=23,
+    budget="nominal",
+    compare_to_reference=False,
+))
+register_scenario(Scenario(
+    name="fig17-comparison",
+    duration_s=WEEK / 2,
+    fleet=FleetSpec(added_frac=0.30),
+))
+register_scenario(Scenario(
+    name="quickstart-plus30",
+    duration_s=3 * 3600.0,
+    fleet=FleetSpec(added_frac=0.30),
+))
+register_scenario(Scenario(
+    name="cluster-2rack",
+    duration_s=DAY / 4,
+    fleet=FleetSpec(n_provisioned=20, added_frac=0.30, n_rows=4, rows_per_rack=2),
+    budget="nominal",
+    traffic=TrafficSpec(occ_peak=0.9),
+    compare_to_reference=False,
+))
+register_scenario(Scenario(
+    name="cluster-six-week",
+    duration_s=6 * WEEK,
+    fleet=FleetSpec(added_frac=0.30, n_rows=8, rows_per_rack=2),
+    traffic=TrafficSpec(occ_peak=0.97),
+    budget="nominal",
+    compare_to_reference=False,
+))

@@ -28,7 +28,7 @@ import jax
 
 from repro.configs import assigned_archs, get_config
 from repro.launch.inputs import input_specs, make_rules, split_seq
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, set_mesh
 from repro.launch.steps import abstract_state, build_serve_step
 from repro.models.config import SHAPES_BY_NAME, shape_applicable
 from repro.optim import Optimizer
@@ -39,7 +39,7 @@ def _lower_compile(cfg, shape, mesh, rules):
     step, opt = build_serve_step(cfg, shape, mesh, rules)
     specs = input_specs(cfg, shape, mesh, rules)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if shape.kind == "train":
             state = abstract_state(cfg, mesh, rules, opt)
             lowered = jax.jit(step).lower(state, specs)

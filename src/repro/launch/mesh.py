@@ -9,6 +9,34 @@ from __future__ import annotations
 import jax
 
 
+def set_mesh(mesh):
+    """Version-compatible ``jax.set_mesh`` for the ``with set_mesh(mesh):``
+    form ONLY.
+
+    ``jax.set_mesh`` only exists on recent jax releases. Fall back to
+    ``jax.sharding.use_mesh`` where available, and finally to the ``Mesh``
+    object itself (a context manager on every jax version we support).
+    Bare (non-``with``) calls are NOT emulated on old jax: the fallbacks
+    return an unentered context manager instead of mutating global state.
+    """
+    native = getattr(jax, "_repro_native_set_mesh", None) or getattr(jax, "set_mesh", None)
+    if native is not None and native is not set_mesh:
+        return native(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh
+
+
+if hasattr(jax, "set_mesh"):
+    jax._repro_native_set_mesh = jax.set_mesh
+else:
+    # Older jax: install the shim so existing `with jax.set_mesh(...)` call
+    # sites keep working once this module is imported (with-form only; see
+    # the docstring above).
+    jax.set_mesh = set_mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

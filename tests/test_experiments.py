@@ -1,0 +1,243 @@
+"""Scenario/Experiment API: serialization, registry, telemetry-protocol
+parity with the legacy step(p) protocol, and ClusterSimulator properties."""
+
+import numpy as np
+import pytest
+
+from repro.core.policy import NoCap, OneThreshold, PolcaPolicy, PredictivePolcaPolicy
+from repro.core.power_model import A100, ServerPower
+from repro.core.simulator import RowSimulator, SimConfig
+from repro.core.telemetry import Telemetry, dispatch
+from repro.core.traces import build_workload_classes, generate_requests
+from repro.experiments import (
+    ClusterSimulator,
+    FleetSpec,
+    PolicySpec,
+    Scenario,
+    get_scenario,
+    list_scenarios,
+    run_experiment,
+)
+
+SERVER = ServerPower(A100)
+WLS, SHARES = build_workload_classes("bloom-176b", SERVER)
+
+
+# ---------------------------------------------------------------- Scenario
+def test_scenario_json_round_trip():
+    sc = Scenario(
+        name="rt",
+        duration_s=3600.0,
+        fleet=FleetSpec(n_provisioned=20, added_frac=0.3, n_rows=2),
+        policy=PolicySpec("polca", {"t1": 0.78, "t2": 0.9}),
+        budget=123456.0,
+    )
+    assert Scenario.from_json(sc.to_json()) == sc
+    # registry entries round-trip too (they are what benchmarks run)
+    for name in list_scenarios():
+        s = get_scenario(name)
+        assert Scenario.from_dict(s.to_dict()) == s
+
+
+def test_registry_lookup():
+    sc = get_scenario("fig14-plus30")
+    assert sc.fleet.n_servers == 52 and sc.fleet.n_provisioned == 40
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
+
+
+def test_policy_spec_builds_fresh_instances():
+    spec = PolicySpec("polca", {"t1": 0.7})
+    a, b = spec.build(), spec.build()
+    assert a is not b and a.t1 == 0.7
+    assert PolicySpec("one-threshold", {"cap_hp": True}).build().cap_hp
+    assert PolicySpec("no-cap").build().name == "no-cap"
+    assert PolicySpec("polca-predictive").build().name == "polca-predictive"
+
+
+# ---------------------------------------------------------------- Telemetry
+def _power_walk():
+    rng = np.random.default_rng(3)
+    p = 0.6
+    out = []
+    for _ in range(400):
+        p = float(np.clip(p + rng.normal(0, 0.04), 0.0, 1.2))
+        out.append(p)
+    return out
+
+
+def test_step_and_observe_are_identical_on_bare_fractions():
+    """The legacy step(p) shim and observe(Telemetry) must replay the same
+    command stream — step IS observe on a wrapped sample."""
+    for mk in (PolcaPolicy, lambda: OneThreshold(cap_hp=True), NoCap):
+        via_step, via_observe = mk(), mk()
+        for p in _power_walk():
+            assert via_step.step(p) == via_observe.observe(Telemetry.from_power_frac(p))
+        assert via_step.n_brakes == via_observe.n_brakes
+
+
+class _LegacyOnlyPolicy:
+    """Old-protocol policy (no observe): the simulator must still drive it."""
+
+    def __init__(self):
+        self.inner = PolcaPolicy()
+        self.n_brakes = 0
+
+    def step(self, p):
+        cmds = self.inner.step(p)
+        self.n_brakes = self.inner.n_brakes
+        return cmds
+
+
+def test_simulator_parity_old_vs_new_protocol():
+    """On identical traces, a telemetry-protocol PolcaPolicy and a legacy
+    step(p)-only wrapper produce identical simulation results."""
+    dur = 1800.0
+    reqs = generate_requests(dur, 26, WLS, SHARES, seed=9, occ_kwargs={"peak": 0.9})
+    r_new = RowSimulator(WLS, SERVER, 26, 20, PolcaPolicy(), reqs, SHARES,
+                         SimConfig(), duration=dur).run()
+    r_old = RowSimulator(WLS, SERVER, 26, 20, _LegacyOnlyPolicy(), reqs, SHARES,
+                         SimConfig(), duration=dur).run()
+    assert r_new.latencies == r_old.latencies
+    assert np.array_equal(r_new.power_w, r_old.power_w)
+    assert r_new.cap_events == r_old.cap_events
+    assert r_new.n_brakes == r_old.n_brakes
+
+
+def test_dispatch_prefers_observe():
+    seen = {}
+
+    class Rich:
+        def observe(self, tel):
+            seen["tel"] = tel
+            return []
+
+        def step(self, p):  # pragma: no cover - must not be called
+            raise AssertionError("dispatch must prefer observe")
+
+    tel = Telemetry(t=4.0, power_frac=0.5, lp_power_frac=0.2)
+    dispatch(Rich(), tel)
+    assert seen["tel"].lp_power_frac == 0.2
+
+
+def test_simulator_telemetry_sample_is_consistent():
+    dur = 900.0
+    reqs = generate_requests(dur, 16, WLS, SHARES, seed=4, occ_kwargs={"peak": 0.9})
+    sim = RowSimulator(WLS, SERVER, 16, 16, NoCap(), reqs, SHARES,
+                       SimConfig(), duration=dur)
+    sim.start()
+    sim.advance_to(dur / 2)
+    tel = sim.sample_telemetry(dur / 2)
+    # priority split sums to the row total; phase split is a sub-fraction
+    assert tel.hp_power_frac + tel.lp_power_frac == pytest.approx(tel.power_frac)
+    assert 0.0 <= tel.prefill_power_frac <= tel.power_frac + 1e-9
+    assert tel.rack_power_frac is None and tel.cluster_power_frac is None
+
+
+def test_predictive_policy_caps_earlier_on_a_ramp():
+    """On a steady upward ramp the predictive variant must issue its first
+    cap no later than (and with headroom, earlier than) reactive POLCA."""
+    ramp = [0.5 + 0.004 * i for i in range(120)]  # crosses T1=0.80 at i=75
+
+    def first_cap_tick(pol):
+        for i, p in enumerate(ramp):
+            if pol.observe(Telemetry(t=2.0 * i, power_frac=p)):
+                return i
+        return len(ramp)
+
+    reactive = first_cap_tick(PolcaPolicy())
+    predictive = first_cap_tick(PredictivePolcaPolicy())
+    assert predictive < reactive
+    # prediction must never fabricate a powerbrake
+    pol = PredictivePolcaPolicy()
+    for i, p in enumerate(ramp):
+        pol.observe(Telemetry(t=2.0 * i, power_frac=p))
+    assert pol.n_brakes == 0
+
+
+def test_predictive_policy_escalates_when_lp_share_is_too_small():
+    pol = PredictivePolcaPolicy(escalation_ticks=50)
+    # drive into T2-capped state
+    pol.observe(Telemetry(t=0.0, power_frac=0.95, lp_power_frac=0.5))
+    assert pol.t2_capped and not pol.hp_capped
+    # LP share (1%) cannot shed the 6% excess over T2 -> immediate HP cap
+    cmds = pol.observe(Telemetry(t=2.0, power_frac=0.95, lp_power_frac=0.01))
+    assert any(c.hp_freq is not None for c in cmds)
+    assert pol.hp_capped
+
+
+# ---------------------------------------------------------------- Cluster
+def _make_rows(n_rows, dur=1200.0, n=24, prov=20, mk=PolcaPolicy):
+    rows = []
+    for i in range(n_rows):
+        reqs = generate_requests(dur, n, WLS, SHARES, seed=100 + i,
+                                 occ_kwargs={"peak": 0.9})
+        rows.append(RowSimulator(WLS, SERVER, n, prov, mk(), reqs, SHARES,
+                                 SimConfig(), duration=dur, row_index=i))
+    return rows
+
+
+def test_cluster_reproduces_single_row_bit_for_bit():
+    """Acceptance: per-row budget == single-row budget -> identical results."""
+    cres = ClusterSimulator(_make_rows(3), rows_per_rack=2).run()
+    solo = [r.run() for r in _make_rows(3)]
+    for a, b in zip(cres.row_results, solo):
+        assert a.latencies == b.latencies
+        assert np.array_equal(a.power_w, b.power_w)
+        assert (a.n_brakes, a.cap_events, a.n_completed) == \
+               (b.n_brakes, b.cap_events, b.n_completed)
+
+
+def test_cluster_determinism():
+    a = ClusterSimulator(_make_rows(2, dur=900.0), rows_per_rack=2).run()
+    b = ClusterSimulator(_make_rows(2, dur=900.0), rows_per_rack=2).run()
+    assert np.array_equal(a.cluster_power_frac, b.cluster_power_frac)
+    for ra, rb in zip(a.row_results, b.row_results):
+        assert ra.latencies == rb.latencies
+
+
+def test_cluster_hierarchy_accounting():
+    cres = ClusterSimulator(_make_rows(4, dur=600.0), rows_per_rack=2).run()
+    assert cres.row_power_frac.shape[1] == 4
+    assert cres.rack_power_frac.shape[1] == 2
+    # budgets default to sums of children: cluster frac == mean of rack fracs
+    # weighted equally here (all rows identical)
+    np.testing.assert_allclose(cres.cluster_power_frac,
+                               cres.rack_power_frac.mean(axis=1), rtol=1e-12)
+    np.testing.assert_allclose(cres.cluster_power_frac,
+                               cres.row_power_frac.mean(axis=1), rtol=1e-12)
+    assert 0.0 < cres.peak_cluster_frac <= 1.3
+
+
+def test_cluster_rows_see_group_telemetry():
+    rows = _make_rows(2, dur=300.0)
+    ClusterSimulator(rows, rows_per_rack=2).run()
+    # after the first tick, the lockstep driver publishes stale group fracs
+    for r in rows:
+        rack, cluster = r.group_fracs
+        assert rack is not None and cluster is not None
+        assert 0.0 < rack < 1.5 and 0.0 < cluster < 1.5
+
+
+# ---------------------------------------------------------------- runner
+def test_run_experiment_row_path_matches_legacy_evaluate():
+    from repro.core.oversubscription import evaluate
+
+    sc = Scenario(name="parity", duration_s=2400.0,
+                  fleet=FleetSpec(n_provisioned=20, added_frac=0.3))
+    o_new = run_experiment(sc)
+    o_old = evaluate(PolcaPolicy, WLS, SHARES, SERVER, 20, 26, 2400.0)
+    assert o_new.result.latencies == o_old.result.latencies
+    assert o_new.stats.summary() == o_old.stats.summary()
+    assert o_new.meets == o_old.meets
+    assert o_new.throughput_ratio_hp == o_old.throughput_ratio_hp
+
+
+def test_run_experiment_cluster_path():
+    sc = get_scenario("cluster-2rack").with_(duration_s=900.0)
+    o = run_experiment(sc)
+    assert o.cluster is not None and o.cluster.n_rows == 4
+    assert o.n_servers == 4 * sc.fleet.n_servers
+    assert o.ref_result is None
+    s = o.stats.summary()
+    assert s["n_hp"] + s["n_lp"] > 0

@@ -1,6 +1,9 @@
 """Hypothesis property tests on Algorithm 1 (the controller's invariants)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.policy import CapCommand, NoCap, OneThreshold, PolcaPolicy

@@ -2,6 +2,7 @@
 
 import jax
 import pytest
+pytest.importorskip("hypothesis")  # see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 

@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.policy import NoCap, PolcaPolicy

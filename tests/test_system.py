@@ -10,6 +10,7 @@ import pytest
 from conftest import make_batch
 from repro.configs import ALL, ASSIGNED, smoke_config
 from repro.launch.inputs import make_rules, split_seq
+from repro.launch.mesh import set_mesh
 from repro.launch.steps import build_decode_step, build_prefill_step, build_train_step
 from repro.models import model as model_mod
 from repro.models.config import ShapeConfig
@@ -37,7 +38,7 @@ def test_train_step_all_archs(name, mesh1):
     state = {"params": params, "opt": opt_state}
     batch = make_batch(cfg, B, S)
     step = jax.jit(build_train_step(cfg, mesh1, rules, opt))
-    with jax.set_mesh(mesh1):
+    with set_mesh(mesh1):
         state2, metrics = step(state, batch)
         state3, metrics3 = step(state2, batch)
     loss = float(metrics["loss"])
@@ -70,7 +71,7 @@ def test_prefill_decode_consistency(name, mesh1):
     b_part["tokens"] = batch["tokens"][:, :-1]
     img = cfg.num_image_embeds if cfg.frontend == "vision_stub" else 0
     pos = jnp.asarray(n_txt - 1 + img, jnp.int32)
-    with jax.set_mesh(mesh1):
+    with set_mesh(mesh1):
         logits_full, _ = pf(params, batch)
         _, cache = pf(params, b_part)
         logits_dec, new_cache = dc(params, batch["tokens"][:, -1:], pos, cache)
@@ -89,7 +90,7 @@ def test_output_shapes_and_no_nans(name, mesh1):
         pytest.skip("encoder-only")
     batch = make_batch(cfg, B, S)
     pf = jax.jit(build_prefill_step(cfg, shape, mesh1, rules))
-    with jax.set_mesh(mesh1):
+    with set_mesh(mesh1):
         logits, cache = pf(params, batch)
     assert logits.shape == (B, 1, cfg.vocab_size)
     assert np.isfinite(np.asarray(logits, np.float32)).all()

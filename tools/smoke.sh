@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Pre-merge smoke gate: tier-1 tests + the table2 quick benchmark, so policy
+# regressions surface before merge (DESIGN.md §7).
+#
+#   bash tools/smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== table2 quick benchmark =="
+python -m benchmarks.run --quick --only table2
+
+echo "smoke OK"

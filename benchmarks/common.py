@@ -1,7 +1,10 @@
-"""Shared benchmark plumbing: Row records, CSV output, validation asserts."""
+"""Shared benchmark plumbing: Row records, CSV output, validation asserts,
+and the ``--seed`` CLI plumbing that makes every benchmark run reproducible
+from the command line (flag -> Scenario.seed -> trace generators)."""
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
@@ -12,6 +15,34 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.power_model import A100, ServerPower  # noqa: E402
 from repro.core.traces import build_workload_classes  # noqa: E402
+
+# CLI-pinned seed (None = each scenario keeps its registered seed). Set via
+# ``--seed`` on benchmarks.run or any module's __main__; modules route every
+# scenario they construct through ``seeded()`` so the override reaches the
+# trace generators end to end.
+BENCH_SEED: Optional[int] = None
+
+
+def set_seed(seed: Optional[int]) -> None:
+    global BENCH_SEED
+    BENCH_SEED = seed
+
+
+def seeded(scenario):
+    """The scenario with the CLI seed applied (identity when none given)."""
+    return scenario if BENCH_SEED is None else scenario.with_(seed=BENCH_SEED)
+
+
+def module_main(run_fn: Callable) -> None:
+    """Shared __main__ entry for benchmark modules: --quick and --seed."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override every scenario's seed (reproducibility)")
+    args = ap.parse_args()
+    set_seed(args.seed)
+    for row in run_fn(quick=args.quick).rows:
+        print(row.csv())
 
 
 @dataclass

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import Bench, WEEK
+from benchmarks.common import Bench, WEEK, module_main, seeded
 from repro.experiments import get_scenario, threshold_search
 
 COMBOS = [(0.75, 0.85), (0.80, 0.89), (0.85, 0.95)]
@@ -14,7 +14,7 @@ COMBOS = [(0.75, 0.85), (0.80, 0.89), (0.85, 0.95)]
 def run(quick: bool = False) -> Bench:
     b = Bench()
     # policy exploration on a shorter slice
-    base = get_scenario("fig13-search-base").with_(
+    base = seeded(get_scenario("fig13-search-base")).with_(
         duration_s=WEEK / 14 if quick else WEEK / 2)
     grid = [0.20, 0.30] if quick else [0.20, 0.25, 0.30, 0.325, 0.35, 0.40]
     t0 = time.perf_counter()
@@ -37,5 +37,4 @@ def run(quick: bool = False) -> Bench:
 
 
 if __name__ == "__main__":
-    for r in run().rows:
-        print(r.csv())
+    module_main(run)

@@ -6,14 +6,14 @@ from __future__ import annotations
 import dataclasses
 import time
 
-from benchmarks.common import Bench, WEEK
+from benchmarks.common import Bench, WEEK, module_main, seeded
 from repro.experiments import get_scenario, run_experiment
 
 
 def run(quick: bool = False) -> Bench:
     b = Bench()
     dur = WEEK / 14 if quick else WEEK / 2
-    base = get_scenario("fig14-plus30").with_(duration_s=dur)
+    base = seeded(get_scenario("fig14-plus30")).with_(duration_s=dur)
 
     # ---- Fig 14 -------------------------------------------------------------
     t0 = time.perf_counter()
@@ -54,5 +54,4 @@ def run(quick: bool = False) -> Bench:
 
 
 if __name__ == "__main__":
-    for r in run().rows:
-        print(r.csv())
+    module_main(run)

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import Bench, WEEK
+from benchmarks.common import Bench, WEEK, module_main, seeded
 from repro.experiments import PolicySpec, get_scenario, run_experiment
 
 POLICIES = [
@@ -19,7 +19,7 @@ POLICIES = [
 
 def run(quick: bool = False) -> Bench:
     b = Bench()
-    base = get_scenario("fig17-comparison").with_(
+    base = seeded(get_scenario("fig17-comparison")).with_(
         duration_s=WEEK / 14 if quick else WEEK / 2)
 
     outcomes = {}
@@ -68,5 +68,4 @@ def run(quick: bool = False) -> Bench:
 
 
 if __name__ == "__main__":
-    for r in run().rows:
-        print(r.csv())
+    module_main(run)

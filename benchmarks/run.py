@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.fig16_six_week",
     "benchmarks.fig17_18_policy_comparison",
     "benchmarks.fig19_beyond_llm",
+    "benchmarks.capacity_planning",
     "benchmarks.phase_aware_savings",
     "benchmarks.kernel_micro",
     "benchmarks.roofline_table",
@@ -31,10 +32,15 @@ MODULES = [
 
 
 def main() -> None:
+    from benchmarks import common
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override every scenario's seed (reproducible runs)")
     args = ap.parse_args()
+    common.set_seed(args.seed)
 
     print("name,us_per_call,derived[,validation]")
     n_fail = 0

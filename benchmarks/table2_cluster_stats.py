@@ -8,13 +8,13 @@ import time
 
 import numpy as np
 
-from benchmarks.common import Bench, WEEK
+from benchmarks.common import Bench, WEEK, module_main, seeded
 from repro.experiments import get_scenario, run_experiment
 
 
 def run(quick: bool = False) -> Bench:
     b = Bench()
-    sc = get_scenario("table2-baseline").with_(
+    sc = seeded(get_scenario("table2-baseline")).with_(
         duration_s=WEEK / 7 if quick else WEEK)
     t0 = time.perf_counter()
     res = run_experiment(sc).result
@@ -44,5 +44,4 @@ def run(quick: bool = False) -> Bench:
 
 
 if __name__ == "__main__":
-    for r in run().rows:
-        print(r.csv())
+    module_main(run)

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
@@ -133,3 +133,113 @@ def mape(a: np.ndarray, b: np.ndarray) -> float:
     """Mean absolute percentage error between two power series."""
     m = np.abs(b) > 1e-9
     return float(np.mean(np.abs(a[m] - b[m]) / np.abs(b[m])))
+
+
+# ---------------------------------------------------------------------------
+# occupancy-generator registry
+# ---------------------------------------------------------------------------
+# A generator maps (t_grid, seed, peak, row-context, params) to a busy-server
+# occupancy curve in [0, 1]. ``TrafficSpec.generator`` names one of these;
+# the experiment runner dispatches through this registry so scenario families
+# (bursty, colocated, failover, ...) plug in without the runner knowing them.
+# The families themselves live in ``repro.provisioning.ensembles`` and
+# register here on import; only "diurnal" is built in.
+
+OccupancyGenerator = Callable[..., np.ndarray]
+
+_OCC_GENERATORS: Dict[str, OccupancyGenerator] = {}
+
+
+def register_occupancy_generator(name: str, gen: OccupancyGenerator, *,
+                                 overwrite: bool = False) -> OccupancyGenerator:
+    if name in _OCC_GENERATORS and not overwrite:
+        raise ValueError(f"occupancy generator {name!r} already registered")
+    _OCC_GENERATORS[name] = gen
+    return gen
+
+
+def get_occupancy_generator(name: str) -> OccupancyGenerator:
+    try:
+        return _OCC_GENERATORS[name]
+    except KeyError:
+        known = ", ".join(sorted(_OCC_GENERATORS))
+        raise KeyError(
+            f"unknown occupancy generator {name!r}; registered: {known}. "
+            "The scenario families register on `import repro.provisioning`."
+        ) from None
+
+
+def list_occupancy_generators() -> List[str]:
+    return sorted(_OCC_GENERATORS)
+
+
+def _diurnal_generator(t_grid: np.ndarray, *, seed: int = 1, peak: float = 0.62,
+                       n_rows: int = 1, row: int = 0, **kw) -> np.ndarray:
+    # The member/scenario seed is deliberately NOT forwarded: the diurnal
+    # baseline models one fixed production curve (occupancy-noise seed 1,
+    # exactly the legacy generate_requests default), so passing gen_params
+    # does not discontinuously re-seed the occupancy realization. Override
+    # explicitly with gen_params={"seed": ...} to vary the curve itself.
+    return occupancy_curve(t_grid, peak=peak, **kw)
+
+
+register_occupancy_generator("diurnal", _diurnal_generator)
+
+
+# ---------------------------------------------------------------------------
+# trace-replication validation (paper Fig. 16)
+# ---------------------------------------------------------------------------
+
+def rolling_mean(x: np.ndarray, window: int) -> np.ndarray:
+    """Centered-ish rolling mean ('valid' mode) used for Fig-16 smoothing."""
+    window = max(1, int(window))
+    return np.convolve(x, np.ones(window) / window, mode="valid")
+
+
+@dataclass(frozen=True)
+class ReplicationReport:
+    """Simulated-vs-analytic row power comparison (Fig. 16 / §6.1)."""
+
+    mape: float
+    sim_smooth: np.ndarray
+    target_smooth: np.ndarray
+    smooth_window_s: float
+
+
+def replication_report(power_t: np.ndarray, power_frac: np.ndarray,
+                       workloads: List[WorkloadClass], shares: List[float],
+                       server: ServerPower, n_servers: int, n_provisioned: int,
+                       *, occ_peak: float = 0.62, occ_kwargs: dict = None,
+                       occupancy: np.ndarray = None,
+                       smooth_window_s: float = 300.0,
+                       duration_s: float = None) -> ReplicationReport:
+    """Compare a simulated row-power series against the analytic production
+    target at the paper's Fig-16 granularity (5-minute averages by default).
+
+    ``power_t``/``power_frac`` are a ``SimResult`` power series (fractions of
+    provisioned row power on the telemetry grid). The target is
+    :func:`target_power_curve` over the diurnal baseline occupancy curve
+    (the production pattern Fig. 16 replicates) — pass ``occupancy`` (on a
+    60 s grid over ``duration_s``) to validate a trace generated by any
+    other occupancy family. The returned MAPE is the §6.1 replication-error
+    metric (paper: < 3% over six weeks).
+    """
+    power_t = np.asarray(power_t, float)
+    power_frac = np.asarray(power_frac, float)
+    if len(power_t) < 3:
+        raise ValueError("replication_report needs a recorded power series "
+                         "(run with record_power=True)")
+    duration = float(duration_s if duration_s is not None else power_t[-1])
+    t_grid = np.arange(0.0, duration, 60.0)
+    occ = (np.asarray(occupancy, float) if occupancy is not None
+           else occupancy_curve(t_grid, peak=occ_peak, **(occ_kwargs or {})))
+    if len(occ) != len(t_grid):
+        raise ValueError(f"occupancy has {len(occ)} samples; expected "
+                         f"{len(t_grid)} (60 s grid over duration_s)")
+    target = target_power_curve(np.interp(power_t, t_grid, occ), workloads,
+                                shares, server, n_servers, n_provisioned)
+    dt = float(power_t[1] - power_t[0])
+    k = max(1, int(round(smooth_window_s / dt)))
+    sim_s, tgt_s = rolling_mean(power_frac, k), rolling_mean(target, k)
+    return ReplicationReport(mape=mape(sim_s, tgt_s), sim_smooth=sim_s,
+                             target_smooth=tgt_s, smooth_window_s=smooth_window_s)

@@ -15,6 +15,8 @@ from repro.experiments.runner import (
     build_workloads,
     calibrated_budget,
     resolve_budget,
+    row_sim,
+    row_trace,
     run_experiment,
     threshold_search,
 )
@@ -52,6 +54,8 @@ __all__ = [
     "list_scenarios",
     "register_scenario",
     "resolve_budget",
+    "row_sim",
+    "row_trace",
     "run_experiment",
     "threshold_search",
 ]

@@ -17,10 +17,16 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.policy import NoCap
-from repro.core.simulator import RowSimulator, SimConfig, SimResult, WorkloadClass
+from repro.core.simulator import Request, RowSimulator, SimConfig, SimResult, WorkloadClass
 from repro.core.slo import LatencyStats, impact_vs_reference, meets_slo
-from repro.core.traces import build_workload_classes, generate_requests
+from repro.core.traces import (
+    build_workload_classes,
+    generate_requests,
+    get_occupancy_generator,
+)
 from repro.experiments.cluster import ClusterResult, ClusterSimulator
 from repro.experiments.scenario import PolicySpec, Scenario
 
@@ -65,13 +71,62 @@ def _sim_config(scenario: Scenario, **overrides) -> SimConfig:
     return SimConfig(**kw)
 
 
+def _generated_occupancy(scenario: Scenario, duration_s: float,
+                         row: int = 0) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """(t_grid, occupancy) from the scenario's registered generator, or None
+    for the built-in diurnal default (which ``generate_requests`` produces
+    itself — kept on the original code path so legacy traces replay
+    bit-identically)."""
+    tr = scenario.traffic
+    if tr.generator == "diurnal" and not tr.gen_params:
+        return None
+    gen = get_occupancy_generator(tr.generator)
+    t_grid = np.arange(0.0, duration_s, 60.0)
+    occ = gen(t_grid, seed=scenario.seed, peak=tr.occ_peak,
+              n_rows=scenario.fleet.n_rows, row=row, **tr.gen_params)
+    return t_grid, occ
+
+
+def row_trace(scenario: Scenario, workloads, shares, n_servers: int, *,
+              seed: int, row: int = 0) -> List[Request]:
+    """The seeded arrival trace for one row of the scenario. The occupancy
+    curve comes from the scenario's trace generator (seeded by
+    ``scenario.seed`` so correlated multi-row structure is preserved); the
+    arrival sampling uses ``seed`` (per-row decorrelation in clusters)."""
+    grid = _generated_occupancy(scenario, scenario.duration_s, row=row)
+    if grid is None:
+        return generate_requests(scenario.duration_s, n_servers, workloads,
+                                 shares, seed=seed,
+                                 occ_kwargs={"peak": scenario.traffic.occ_peak})
+    t_grid, occ = grid
+    return generate_requests(scenario.duration_s, n_servers, workloads, shares,
+                             occupancy=occ, t_grid=t_grid, seed=seed)
+
+
+def row_sim(scenario: Scenario, workloads, shares, server,
+            budget_w: Optional[float], policy, reqs: List[Request], *,
+            row_index: int = 0) -> RowSimulator:
+    """The policy-run RowSimulator for one row of the scenario — the single
+    construction point shared by ``run_experiment`` and the Monte-Carlo
+    engine (``repro.provisioning.montecarlo``), so batched runs stay
+    bit-identical with sequential ones by construction."""
+    fleet = scenario.fleet
+    return RowSimulator(workloads, server, fleet.n_servers, fleet.n_provisioned,
+                        policy, reqs, shares, _sim_config(scenario),
+                        duration=scenario.duration_s, provisioned_w=budget_w,
+                        row_index=row_index)
+
+
 def calibrated_budget(workloads, shares, server, n_provisioned: int,
                       duration: float, *, seed: int = 7, occ_peak: float = 0.62,
-                      power_scale: float = 1.0) -> float:
+                      power_scale: float = 1.0, occupancy: np.ndarray = None,
+                      t_grid: np.ndarray = None) -> float:
     """Row power budget such that the n_provisioned baseline peaks at 79% of
     it (the paper's Table-2 operating point — budgets are PDU limits, not the
-    sum of server ratings)."""
+    sum of server ratings). Pass ``occupancy``/``t_grid`` to calibrate
+    against a generated (non-diurnal) occupancy curve."""
     reqs = generate_requests(duration, n_provisioned, workloads, shares, seed=seed,
+                             occupancy=occupancy, t_grid=t_grid,
                              occ_kwargs={"peak": occ_peak})
     base = RowSimulator(workloads, server, n_provisioned, 100 * n_provisioned,
                         NoCap(), reqs, shares,
@@ -89,10 +144,13 @@ def resolve_budget(scenario: Scenario, workloads, shares, server) -> Optional[fl
     if scenario.budget == "nominal":
         return None
     if scenario.budget == "calibrated":
+        cal_dur = min(scenario.duration_s, 2 * 86400.0)
+        grid = _generated_occupancy(scenario, cal_dur)
+        t_grid, occ = grid if grid is not None else (None, None)
         return calibrated_budget(
-            workloads, shares, server, scenario.fleet.n_provisioned,
-            min(scenario.duration_s, 2 * 86400.0), seed=scenario.seed,
-            occ_peak=scenario.traffic.occ_peak, power_scale=1.0)
+            workloads, shares, server, scenario.fleet.n_provisioned, cal_dur,
+            seed=scenario.seed, occ_peak=scenario.traffic.occ_peak,
+            power_scale=1.0, occupancy=occ, t_grid=t_grid)
     raise ValueError(f"unknown budget spec {scenario.budget!r}")
 
 
@@ -129,8 +187,7 @@ def _run_row(scenario: Scenario, wls, shares, server,
              budget_w: Optional[float], policy_factory) -> ExperimentResult:
     fleet = scenario.fleet
     n = fleet.n_servers
-    reqs = generate_requests(scenario.duration_s, n, wls, shares, seed=scenario.seed,
-                             occ_kwargs={"peak": scenario.traffic.occ_peak})
+    reqs = row_trace(scenario, wls, shares, n, seed=scenario.seed)
     prios = {r.rid: r.priority for r in reqs}
 
     ref = None
@@ -140,9 +197,8 @@ def _run_row(scenario: Scenario, wls, shares, server,
                            SimConfig(power_scale=scenario.power_scale,
                                      record_power=False),
                            duration=scenario.duration_s).run()
-    res = RowSimulator(wls, server, n, fleet.n_provisioned, policy_factory(),
-                       reqs, shares, _sim_config(scenario),
-                       duration=scenario.duration_s, provisioned_w=budget_w).run()
+    res = row_sim(scenario, wls, shares, server, budget_w, policy_factory(),
+                  reqs).run()
 
     if ref is not None:
         stats = impact_vs_reference(res.latencies, ref.latencies, prios)
@@ -169,16 +225,12 @@ def _run_cluster(scenario: Scenario, wls, shares, server,
     rows = []
     traces = []
     for i in range(fleet.n_rows):
-        # each row gets its own arrival trace (decorrelated diurnal noise)
-        reqs = generate_requests(scenario.duration_s, n, wls, shares,
-                                 seed=scenario.seed + i,
-                                 occ_kwargs={"peak": scenario.traffic.occ_peak})
+        # each row gets its own arrival trace (decorrelated arrivals; the
+        # occupancy generator controls cross-row correlation structure)
+        reqs = row_trace(scenario, wls, shares, n, seed=scenario.seed + i, row=i)
         traces.append(reqs)
-        rows.append(RowSimulator(wls, server, n, fleet.n_provisioned,
-                                 policy_factory(), reqs, shares,
-                                 _sim_config(scenario),
-                                 duration=scenario.duration_s,
-                                 provisioned_w=budget_w, row_index=i))
+        rows.append(row_sim(scenario, wls, shares, server, budget_w,
+                            policy_factory(), reqs, row_index=i))
     cres = ClusterSimulator(rows, rows_per_rack=fleet.rows_per_rack,
                             telemetry_s=scenario.telemetry.telemetry_s).run()
     if scenario.compare_to_reference:

@@ -74,10 +74,19 @@ class FleetSpec:
 
 @dataclass(frozen=True)
 class TrafficSpec:
-    """Workload-mix knobs over the Table-4 classes."""
+    """Workload-mix knobs over the Table-4 classes.
+
+    ``generator`` names an occupancy-curve family in the
+    ``core.traces`` generator registry ("diurnal" is built in; the scenario
+    families — bursty, colocated, failover-surge, rack-incident, nighttime —
+    register on ``import repro.provisioning``). ``gen_params`` are passed to
+    the generator verbatim, so scenarios stay JSON-serializable.
+    """
 
     occ_peak: float = 0.62  # diurnal occupancy peak (busy-server fraction)
     priority_mix_override: Optional[float] = None  # force every class's HP mix
+    generator: str = "diurnal"
+    gen_params: Dict[str, Any] = field(default_factory=dict)
 
 
 @dataclass(frozen=True)

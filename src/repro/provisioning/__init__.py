@@ -1,0 +1,53 @@
+"""Provisioning planner: trace ensembles, Monte-Carlo capacity evaluation,
+and risk-constrained oversubscription search (DESIGN.md §9).
+
+Importing this package registers the scenario-family trace generators
+(bursty, colocated, failover-surge, rack-incident, nighttime) and the named
+``mc-*`` scenarios alongside the figure scenarios.
+"""
+
+from repro.provisioning.ensembles import (
+    GENERATOR_FAMILY,
+    MC_BASE_NAME,
+    MC_SCENARIO_FAMILY,
+    SiteTrace,
+    compose_rows,
+    compose_site,
+)
+from repro.provisioning.montecarlo import (
+    EnsembleResult,
+    EnsembleSpec,
+    MemberStats,
+    resolve_ensemble_budget,
+    run_ensemble,
+    run_ensemble_grid,
+    run_ensemble_sequential,
+)
+from repro.provisioning.planner import (
+    PlanPoint,
+    PlanResult,
+    RiskConstraints,
+    plan_capacity,
+    plan_scenarios,
+)
+
+__all__ = [
+    "EnsembleResult",
+    "EnsembleSpec",
+    "GENERATOR_FAMILY",
+    "MC_BASE_NAME",
+    "MC_SCENARIO_FAMILY",
+    "MemberStats",
+    "PlanPoint",
+    "PlanResult",
+    "RiskConstraints",
+    "SiteTrace",
+    "compose_rows",
+    "compose_site",
+    "plan_capacity",
+    "plan_scenarios",
+    "resolve_ensemble_budget",
+    "run_ensemble",
+    "run_ensemble_grid",
+    "run_ensemble_sequential",
+]

@@ -1,0 +1,366 @@
+"""Vectorized Monte-Carlo ensemble engine over the POLCA cluster simulator.
+
+``run_ensemble`` evaluates N seeded traffic realizations of a scenario (and
+``run_ensemble_grid`` an N seeds x M scenarios grid) in one batched pass:
+
+* the row power budget is resolved **once** from the base scenario and pinned
+  across every member — Monte-Carlo asks "how does one fixed infrastructure
+  design behave under traffic uncertainty", so per-member re-calibration
+  (what a naive ``run_experiment`` loop does) would erase the very
+  variability being measured;
+* members run as a lockstep fleet of :class:`RowSimulator`\\ s (advanced on a
+  shared stride grid, the same drive mode the ClusterSimulator uses), sharded
+  across a small fork-based process pool;
+* per-tick power series land in one ``[members, ticks]`` numpy matrix and
+  every distributional statistic — powerbrake-count CDFs, SLO-impact
+  percentiles, peak-power exceedance curves — is a vectorized reduction over
+  it.
+
+Member simulations are constructed through the exact same
+:func:`repro.experiments.runner.row_trace` / ``row_sim`` path as
+``run_experiment``, so batched results are **bit-identical** to a sequential
+``run_experiment`` loop over :meth:`EnsembleSpec.member_scenarios` (asserted
+in tests) while avoiding its per-member budget calibration — and, in the
+default no-reference mode, its per-member uncapped reference runs too (SLO
+impacts are then relative to the unqueued uncapped ideal). Set
+``EnsembleSpec(with_reference=True)`` for the paper's paired-reference SLO
+comparison (the capacity planner does): references run in the same batched
+pass.
+"""
+
+from __future__ import annotations
+
+import multiprocessing
+import os
+import warnings
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.policy import NoCap
+from repro.core.simulator import RowSimulator, SimConfig, SimResult
+from repro.core.slo import SLO, LatencyStats, impact_vs_reference, meets_slo
+from repro.experiments.runner import (
+    ExperimentResult,
+    build_workloads,
+    resolve_budget,
+    row_sim,
+    row_trace,
+    run_experiment,
+)
+from repro.experiments.scenario import Scenario
+
+import repro.provisioning.ensembles  # noqa: F401  (registers trace generators)
+
+
+@dataclass(frozen=True)
+class EnsembleSpec:
+    """N seeded members of one base scenario.
+
+    ``seed0 + k`` seeds member ``k``'s traffic realization. ``n_workers``
+    defaults to the available CPUs (capped by the member count); pass 1 to
+    force a single-process run. ``lockstep_stride_s`` only controls how often
+    the lockstep driver yields between members — results are stride-invariant
+    (the row event queues are exact regardless of drive granularity).
+
+    ``with_reference=True`` pairs every member with an uncapped reference run
+    on the same trace, so SLO stats are the paper's capping-impact-only
+    comparison (what the planner gates on) instead of ideal-relative impacts
+    that fold queueing noise in. It doubles the per-member cost.
+    """
+
+    base: Scenario
+    n_seeds: int = 8
+    seed0: int = 1000
+    n_workers: Optional[int] = None
+    lockstep_stride_s: float = 120.0
+    with_reference: bool = False
+
+    def seeds(self) -> List[int]:
+        return [self.seed0 + k for k in range(self.n_seeds)]
+
+    def member_scenarios(self, budget_w: Optional[float] = None) -> List[Scenario]:
+        """The concrete per-member scenarios the engine simulates: pinned
+        explicit budget, one seed each."""
+        budget = self.base.budget if budget_w is None else float(budget_w)
+        return [self.base.with_(name=f"{self.base.name}@s{s}", seed=s,
+                                budget=budget,
+                                compare_to_reference=self.with_reference)
+                for s in self.seeds()]
+
+
+@dataclass
+class MemberStats:
+    """One ensemble member: its scenario, the policy-run SimResult, and the
+    SLO-impact stats (reference-relative when the member ran with a paired
+    uncapped reference, ideal-relative otherwise)."""
+
+    scenario: Scenario
+    result: SimResult
+    stats: LatencyStats
+
+    @property
+    def meets(self) -> bool:
+        return meets_slo(self.stats, self.result.n_brakes, self.scenario.slo)
+
+
+@dataclass
+class EnsembleResult:
+    """Distributional telemetry over one ensemble (vectorized accounting)."""
+
+    base_name: str
+    budget_w: float
+    members: List[MemberStats]
+    power_t: np.ndarray = field(repr=False)  # [T] telemetry grid
+    power_frac: np.ndarray = field(repr=False)  # [N, T] of row budget
+    brake_counts: np.ndarray = field(repr=False)  # [N]
+    peak_fracs: np.ndarray = field(repr=False)  # [N]
+    mean_fracs: np.ndarray = field(repr=False)  # [N]
+
+    @property
+    def n_members(self) -> int:
+        return len(self.members)
+
+    # -- powerbrake distribution -------------------------------------------
+    def brake_prob(self) -> float:
+        """P[a member experiences >= 1 powerbrake]."""
+        return float(np.mean(self.brake_counts > 0))
+
+    def brake_cdf(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(counts, P[brakes <= count]) — the powerbrake-count CDF."""
+        counts = np.sort(self.brake_counts)
+        return counts, np.arange(1, len(counts) + 1) / len(counts)
+
+    # -- power distribution -------------------------------------------------
+    def peak_exceedance(self, levels: Sequence[float]) -> np.ndarray:
+        """P[member peak power > level] per level (fractions of budget)."""
+        lv = np.asarray(levels, float)
+        return (self.peak_fracs[None, :] > lv[:, None]).mean(axis=1)
+
+    def power_exceedance(self, levels: Sequence[float]) -> np.ndarray:
+        """Time-pooled P[instantaneous row power > level] over all members."""
+        lv = np.asarray(levels, float)
+        if self.power_frac.size == 0:
+            return np.zeros_like(lv)
+        # sort once + searchsorted per level: O(NT log NT), no [L, NT] matrix
+        flat = np.sort(self.power_frac, axis=None)
+        return 1.0 - np.searchsorted(flat, lv, side="right") / flat.size
+
+    # -- SLO distribution ---------------------------------------------------
+    def slo_impacts(self, priority: str) -> np.ndarray:
+        """All per-request latency impacts of ``priority``, pooled."""
+        key = "hp_impacts" if priority == "high" else "lp_impacts"
+        xs = [getattr(m.stats, key) for m in self.members]
+        return np.concatenate([np.asarray(x) for x in xs]) if any(
+            len(x) for x in xs) else np.zeros(0)
+
+    def slo_percentile(self, priority: str, q: float) -> float:
+        xs = self.slo_impacts(priority)
+        return float(np.percentile(xs, q)) if len(xs) else 0.0
+
+    def meets_fraction(self, slo: Optional[SLO] = None) -> float:
+        """Fraction of members meeting the SLO (per-member gate)."""
+        if slo is None:
+            return float(np.mean([m.meets for m in self.members]))
+        return float(np.mean([
+            meets_slo(m.stats, m.result.n_brakes, slo)
+            for m in self.members]))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "n_members": float(self.n_members),
+            "brake_prob": self.brake_prob(),
+            "meets_frac": self.meets_fraction(),
+            "peak_p50": float(np.median(self.peak_fracs)),
+            "peak_max": float(self.peak_fracs.max()) if len(self.peak_fracs) else 0.0,
+            "hp_p99": self.slo_percentile("high", 99),
+            "lp_p99": self.slo_percentile("low", 99),
+        }
+
+
+# ---------------------------------------------------------------------------
+# the batched engine
+# ---------------------------------------------------------------------------
+
+_WLS_CACHE: Dict[tuple, tuple] = {}
+
+
+def _cached_workloads(scenario: Scenario):
+    key = (scenario.fleet.model, scenario.fleet.device,
+           scenario.fleet.n_devices_per_server,
+           scenario.traffic.priority_mix_override)
+    if key not in _WLS_CACHE:
+        _WLS_CACHE[key] = build_workloads(scenario)
+    return _WLS_CACHE[key]
+
+
+def _run_shard(payload: Tuple[List[Scenario], float]) -> List[Tuple[SimResult, LatencyStats]]:
+    """Worker: run one shard of members as a lockstep fleet (the cluster
+    drive mode: start all, advance all on a stride grid, finalize all).
+    Members whose scenario requests a reference comparison get a paired
+    uncapped reference simulation in the same lockstep pass."""
+    scenarios, stride = payload
+    sims: List[RowSimulator] = []
+    refs: List[Optional[RowSimulator]] = []
+    traces = []
+    for sc in scenarios:
+        wls, shares = _cached_workloads(sc)
+        server = sc.fleet.server()
+        n = sc.fleet.n_servers
+        reqs = row_trace(sc, wls, shares, n, seed=sc.seed)
+        traces.append(reqs)
+        if sc.budget == "nominal":
+            budget = None  # RowSimulator default: n_provisioned x rating
+        elif isinstance(sc.budget, (int, float)):
+            budget = float(sc.budget)
+        else:
+            raise ValueError(
+                f"member {sc.name!r} reached the batch runner with budget="
+                f"{sc.budget!r}; resolve it to watts first (run_ensemble "
+                "pins the base scenario's resolved budget across members)")
+        sims.append(row_sim(sc, wls, shares, server, budget,
+                            sc.policy.build(), reqs))
+        if sc.compare_to_reference:
+            # uncapped twin, constructed exactly as run_experiment's _run_row
+            refs.append(RowSimulator(wls, server, n, 10 * n, NoCap(), reqs,
+                                     shares,
+                                     SimConfig(power_scale=sc.power_scale,
+                                               record_power=False),
+                                     duration=sc.duration_s))
+        else:
+            refs.append(None)
+    fleet = sims + [r for r in refs if r is not None]
+    for s in fleet:
+        s.start()
+    duration = max((s.duration for s in fleet), default=0.0)
+    alive = [True] * len(fleet)
+    t = stride
+    while t <= duration and any(alive):
+        for i, s in enumerate(fleet):
+            if alive[i]:
+                alive[i] = s.advance_to(min(t, s.duration))
+        t += stride
+    for s in fleet:
+        s.advance_to(s.duration)
+    out = []
+    for sim, ref, reqs in zip(sims, refs, traces):
+        res = sim.finalize()
+        if ref is None:
+            stats = res.latency
+        else:
+            stats = impact_vs_reference(res.latencies, ref.finalize().latencies,
+                                        {r.rid: r.priority for r in reqs})
+        out.append((res, stats))
+    return out
+
+
+def _map_shards(shards: List[Tuple[List[Scenario], float]],
+                n_workers: int) -> List[List[Tuple[SimResult, LatencyStats]]]:
+    if n_workers <= 1 or len(shards) <= 1:
+        return [_run_shard(sh) for sh in shards]
+    try:
+        ctx = multiprocessing.get_context("fork")
+        with ctx.Pool(processes=n_workers) as pool:
+            return pool.map(_run_shard, shards)
+    except (OSError, ValueError) as e:  # restricted sandboxes: no fork/sem
+        warnings.warn(f"process pool unavailable ({e}); running inline")
+        return [_run_shard(sh) for sh in shards]
+
+
+def _default_workers(n_members: int, n_workers: Optional[int]) -> int:
+    if n_workers is not None:
+        return max(1, n_workers)
+    try:
+        cpus = len(os.sched_getaffinity(0))
+    except AttributeError:  # non-linux
+        cpus = os.cpu_count() or 1
+    return max(1, min(cpus, n_members))
+
+
+def _run_members(members: List[Scenario], stride: float,
+                 n_workers: int) -> List[Tuple[SimResult, LatencyStats]]:
+    """One batched pass over concrete member scenarios, order-preserving."""
+    w = _default_workers(len(members), n_workers)
+    bounds = np.linspace(0, len(members), w + 1).astype(int)
+    shards = [(members[a:b], stride) for a, b in zip(bounds, bounds[1:]) if b > a]
+    return [r for shard in _map_shards(shards, len(shards)) for r in shard]
+
+
+def _ensemble_result(base: Scenario, budget_w: float, members: List[Scenario],
+                     pairs: List[Tuple[SimResult, LatencyStats]]) -> EnsembleResult:
+    stats = [MemberStats(sc, res, st) for sc, (res, st) in zip(members, pairs)]
+    results = [res for res, _ in pairs]
+    series = [res.power_w for res in results if res.power_w is not None]
+    if series and all(len(s) == len(series[0]) for s in series):
+        power = np.stack(series)
+        power_t = results[0].power_t
+    else:  # record_power off, or ragged (heterogeneous durations)
+        power = np.zeros((0, 0))
+        power_t = np.zeros(0)
+    return EnsembleResult(
+        base_name=base.name,
+        budget_w=budget_w,
+        members=stats,
+        power_t=power_t,
+        power_frac=power,
+        brake_counts=np.asarray([r.n_brakes for r in results]),
+        peak_fracs=np.asarray([r.peak_power_frac for r in results]),
+        mean_fracs=np.asarray([r.mean_power_frac for r in results]),
+    )
+
+
+def resolve_ensemble_budget(base: Scenario) -> float:
+    """The pinned row budget (watts) shared by every ensemble member."""
+    wls, shares = _cached_workloads(base)
+    server = base.fleet.server()
+    budget = resolve_budget(base, wls, shares, server)
+    if budget is None:  # "nominal": pin the explicit equivalent
+        budget = base.fleet.n_provisioned * server.provisioned_w
+    return float(budget)
+
+
+def run_ensemble(spec: EnsembleSpec, *,
+                 budget_w: Optional[float] = None) -> EnsembleResult:
+    """Evaluate all members of ``spec`` in one batched pass."""
+    budget = resolve_ensemble_budget(spec.base) if budget_w is None else float(budget_w)
+    members = spec.member_scenarios(budget)
+    results = _run_members(members, spec.lockstep_stride_s,
+                           _default_workers(len(members), spec.n_workers))
+    return _ensemble_result(spec.base, budget, members, results)
+
+
+def run_ensemble_grid(bases: Sequence[Scenario], *, n_seeds: int = 8,
+                      seed0: int = 1000, n_workers: Optional[int] = None,
+                      budget_w: Optional[float] = None,
+                      lockstep_stride_s: float = 120.0) -> Dict[str, EnsembleResult]:
+    """N seeds x M scenarios in one batched pass: all M*N members are
+    flattened into a single work list, sharded across the pool together, and
+    re-grouped into one :class:`EnsembleResult` per base scenario."""
+    specs = [EnsembleSpec(b, n_seeds=n_seeds, seed0=seed0,
+                          n_workers=n_workers,
+                          lockstep_stride_s=lockstep_stride_s) for b in bases]
+    budgets = [resolve_ensemble_budget(s.base) if budget_w is None
+               else float(budget_w) for s in specs]
+    member_lists = [s.member_scenarios(bw) for s, bw in zip(specs, budgets)]
+    flat = [m for ml in member_lists for m in ml]
+    results = _run_members(flat, lockstep_stride_s,
+                           _default_workers(len(flat), n_workers))
+    out: Dict[str, EnsembleResult] = {}
+    i = 0
+    for spec, bw, ml in zip(specs, budgets, member_lists):
+        out[spec.base.name] = _ensemble_result(spec.base, bw, ml,
+                                               results[i:i + len(ml)])
+        i += len(ml)
+    return out
+
+
+def run_ensemble_sequential(spec: EnsembleSpec, *,
+                            n_members: Optional[int] = None) -> List[ExperimentResult]:
+    """The naive alternative the engine replaces: a Python loop calling
+    ``run_experiment`` per seed with the base scenario's declared semantics
+    (so per-member budget calibration and reference runs are repeated N
+    times). Kept as the speed-comparison baseline for the capacity-planning
+    benchmark; ``n_members`` limits how many seeds are actually run."""
+    seeds = spec.seeds()[:n_members if n_members is not None else spec.n_seeds]
+    return [run_experiment(spec.base.with_(seed=s)) for s in seeds]

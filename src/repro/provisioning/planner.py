@@ -1,0 +1,174 @@
+"""Risk-constrained capacity planner (the paper's headline 30% claim).
+
+POLCA §7: with the T1/T2 controller, the same row power envelope safely
+hosts ~30% more inference servers. This module turns that one-off figure
+into a *search*: :func:`plan_capacity` bisects over the number of added
+servers, evaluating each candidate fleet with a Monte-Carlo ensemble of
+seeded traffic realizations (``repro.provisioning.montecarlo``) and keeping
+the largest fleet whose ensemble satisfies the risk constraints:
+
+* ``max_brake_prob`` — bound on P[a traffic realization triggers >= 1
+  hardware powerbrake] (the paper plans for zero);
+* ``max_slo_violation_prob`` — bound on P[a realization misses the Table-5
+  latency SLOs] (percentile gates from ``core.slo``).
+
+SLO impacts are measured the way the paper measures them: each member diffs
+per-request latencies against an uncapped reference run on the same trace
+(``EnsembleSpec(with_reference=True)``), so the gate isolates capping impact
+from queueing noise — which is also what keeps feasibility monotone in fleet
+size (more servers on the same budget -> strictly more capping pressure) and
+bisection sound. The planner records every probe so the frontier is
+auditable. The budget is resolved once from the provisioned baseline and held
+fixed across candidates and members: the question is "how far can THIS
+envelope stretch", not "what envelope would each fleet want".
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.slo import DEFAULT_SLO, SLO, meets_slo
+from repro.experiments.scenario import Scenario
+from repro.provisioning.montecarlo import (
+    EnsembleResult,
+    EnsembleSpec,
+    resolve_ensemble_budget,
+    run_ensemble,
+)
+
+_EPS = 1e-12
+
+
+@dataclass(frozen=True)
+class RiskConstraints:
+    """What the planner is allowed to risk across traffic realizations."""
+
+    max_brake_prob: float = 0.0  # P[member sees a powerbrake]
+    max_slo_violation_prob: float = 0.0  # P[member misses the SLO]
+    slo: SLO = DEFAULT_SLO
+
+
+@dataclass
+class PlanPoint:
+    """One bisection probe: a candidate fleet and its ensemble verdict."""
+
+    added_servers: int
+    added_frac: float
+    feasible: bool
+    brake_prob: float
+    slo_violation_prob: float
+    peak_frac_max: float
+    ensemble: Optional[EnsembleResult] = field(default=None, repr=False)
+
+
+@dataclass
+class PlanResult:
+    """Outcome of one capacity search."""
+
+    scenario_name: str
+    n_provisioned: int
+    budget_w: float
+    safe_added_servers: int
+    probes: List[PlanPoint]
+    capped: bool = False  # search hit max_added_frac while still feasible
+    feasible_at_zero: bool = True
+
+    @property
+    def safe_added_frac(self) -> float:
+        return self.safe_added_servers / self.n_provisioned
+
+    @property
+    def safe_n_servers(self) -> int:
+        return self.n_provisioned + self.safe_added_servers
+
+    def summary(self) -> Dict[str, float]:
+        return {"safe_added_frac": self.safe_added_frac,
+                "safe_n_servers": float(self.safe_n_servers),
+                "budget_w": self.budget_w,
+                "n_probes": float(len(self.probes))}
+
+
+def _violation_prob(ens: EnsembleResult, slo: SLO) -> float:
+    """P[member misses the SLO], powerbrakes excluded (they are constrained
+    separately by ``max_brake_prob``)."""
+    misses = [not meets_slo(m.stats, 0, slo) for m in ens.members]
+    return float(sum(misses)) / max(1, len(misses))
+
+
+def plan_capacity(base: Scenario, *,
+                  constraints: RiskConstraints = RiskConstraints(),
+                  n_seeds: int = 4, seed0: int = 1000,
+                  max_added_frac: float = 0.60,
+                  budget_w: Optional[float] = None,
+                  n_workers: Optional[int] = None,
+                  keep_ensembles: bool = False) -> PlanResult:
+    """Maximum deployable fleet for ``base``'s traffic family under
+    ``constraints``.
+
+    Bisects over integer added-server counts in ``[0, n_provisioned *
+    max_added_frac]``; each probe runs an ``n_seeds``-member Monte-Carlo
+    ensemble at a pinned budget (resolved from ``base`` once unless
+    ``budget_w`` pins it externally — e.g. to plan several traffic scenarios
+    against the same baseline-calibrated envelope).
+    """
+    n_prov = base.fleet.n_provisioned
+    budget = resolve_ensemble_budget(base) if budget_w is None else float(budget_w)
+    probes: List[PlanPoint] = []
+
+    def probe(k: int) -> PlanPoint:
+        sc = base.with_fleet(added_frac=k / n_prov).with_(budget=budget)
+        ens = run_ensemble(EnsembleSpec(sc, n_seeds=n_seeds, seed0=seed0,
+                                        n_workers=n_workers,
+                                        with_reference=True),
+                           budget_w=budget)
+        brake_p = ens.brake_prob()
+        slo_p = _violation_prob(ens, constraints.slo)
+        pt = PlanPoint(
+            added_servers=k, added_frac=k / n_prov,
+            feasible=(brake_p <= constraints.max_brake_prob + _EPS
+                      and slo_p <= constraints.max_slo_violation_prob + _EPS),
+            brake_prob=brake_p, slo_violation_prob=slo_p,
+            peak_frac_max=float(ens.peak_fracs.max()) if len(ens.peak_fracs) else 0.0,
+            ensemble=ens if keep_ensembles else None)
+        probes.append(pt)
+        return pt
+
+    hi = max(1, int(math.floor(n_prov * max_added_frac)))
+    top = probe(hi)
+    if top.feasible:
+        return PlanResult(base.name, n_prov, budget, hi, probes, capped=True)
+    bottom = probe(0)
+    if not bottom.feasible:
+        return PlanResult(base.name, n_prov, budget, 0, probes,
+                          feasible_at_zero=False)
+    lo = 0
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if probe(mid).feasible:
+            lo = mid
+        else:
+            hi = mid
+    return PlanResult(base.name, n_prov, budget, lo, probes)
+
+
+def plan_scenarios(bases: List[Scenario], *,
+                   constraints: RiskConstraints = RiskConstraints(),
+                   n_seeds: int = 4, seed0: int = 1000,
+                   max_added_frac: float = 0.60,
+                   budget_w: Optional[float] = None,
+                   n_workers: Optional[int] = None) -> Dict[str, PlanResult]:
+    """Per-scenario safe oversubscription ratios for a generator family, all
+    planned against the same power envelope (resolved from the first base
+    unless pinned). This is the provisioning-planner headline table: how far
+    the envelope stretches under nominal, bursty, colocated, failover,
+    incident, and nighttime traffic."""
+    if not bases:
+        return {}
+    budget = (resolve_ensemble_budget(bases[0]) if budget_w is None
+              else float(budget_w))
+    return {b.name: plan_capacity(b, constraints=constraints, n_seeds=n_seeds,
+                                  seed0=seed0, max_added_frac=max_added_frac,
+                                  budget_w=budget, n_workers=n_workers)
+            for b in bases}

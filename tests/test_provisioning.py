@@ -1,0 +1,213 @@
+"""Provisioning subsystem: ensemble determinism, composition invariants,
+batched-vs-sequential Monte-Carlo bit-parity, planner monotonicity."""
+
+import numpy as np
+import pytest
+
+from repro.core.slo import SLO
+from repro.core.traces import (
+    get_occupancy_generator,
+    list_occupancy_generators,
+    replication_report,
+)
+from repro.experiments import (
+    FleetSpec,
+    PolicySpec,
+    Scenario,
+    TrafficSpec,
+    get_scenario,
+    run_experiment,
+)
+from repro.provisioning import (
+    MC_SCENARIO_FAMILY,
+    EnsembleSpec,
+    RiskConstraints,
+    compose_rows,
+    compose_site,
+    plan_capacity,
+    run_ensemble,
+    run_ensemble_grid,
+)
+
+T_GRID = np.arange(0.0, 6 * 3600.0, 60.0)
+
+SMALL = Scenario(
+    name="prov-small",
+    duration_s=1800.0,
+    fleet=FleetSpec(n_provisioned=20, added_frac=0.30),
+    policy=PolicySpec("polca"),
+    traffic=TrafficSpec(occ_peak=0.9),
+    budget="nominal",
+    compare_to_reference=False,
+)
+
+
+# ------------------------------------------------------------- generators
+def test_generator_family_registered():
+    names = list_occupancy_generators()
+    for expected in ("diurnal", "bursty", "colocated", "failover-surge",
+                     "rack-incident", "nighttime"):
+        assert expected in names
+
+
+@pytest.mark.parametrize("name", ["bursty", "colocated", "failover-surge",
+                                  "rack-incident", "nighttime"])
+def test_generator_determinism_and_range(name):
+    gen = get_occupancy_generator(name)
+    a = gen(T_GRID, seed=11, peak=0.62)
+    b = gen(T_GRID, seed=11, peak=0.62)
+    c = gen(T_GRID, seed=12, peak=0.62)
+    assert np.array_equal(a, b), "same seed must replay bit-identically"
+    assert not np.array_equal(a, c), "different seeds must differ"
+    assert a.shape == T_GRID.shape
+    assert a.min() >= 0.05 - 1e-12 and a.max() <= 0.98 + 1e-12
+
+
+def test_generator_rows_are_deterministic_per_row():
+    gen = get_occupancy_generator("bursty")
+    r0 = gen(T_GRID, seed=3, peak=0.62, n_rows=4, row=0, rho=0.5)
+    r0b = gen(T_GRID, seed=3, peak=0.62, n_rows=4, row=0, rho=0.5)
+    r1 = gen(T_GRID, seed=3, peak=0.62, n_rows=4, row=1, rho=0.5)
+    assert np.array_equal(r0, r0b)
+    assert not np.array_equal(r0, r1), "rows must decorrelate at rho<1"
+
+
+def test_rack_incident_zeroes_lost_rack_rows():
+    gen = get_occupancy_generator("rack-incident")
+    rows = [gen(T_GRID, seed=5, peak=0.62, n_rows=4, row=r, rows_per_rack=2)
+            for r in range(4)]
+    floors = [np.isclose(r, 0.05).mean() for r in rows]
+    # exactly one rack (2 rows) sits at the idle floor during the incident
+    assert sum(f > 0.2 for f in floors) == 2, floors
+
+
+# ------------------------------------------------------------ composition
+def test_compose_rows_correlation_extremes():
+    base = get_occupancy_generator("diurnal")(T_GRID, seed=1, peak=0.62)
+    sync = compose_rows(base, 3, rho=1.0, seed=9, t_grid=T_GRID)
+    indep = compose_rows(base, 3, rho=0.0, seed=9, t_grid=T_GRID)
+    assert np.array_equal(sync[0], sync[1]), "rho=1: rows identical"
+    assert not np.array_equal(indep[0], indep[1]), "rho=0: rows differ"
+    assert sync.shape == (3, len(T_GRID))
+
+
+def test_compose_site_conservation_invariants():
+    rng = np.random.default_rng(0)
+    row_w = rng.uniform(10.0, 100.0, size=(5, 40))
+    site = compose_site(row_w, rows_per_rack=2)
+    assert site.rack_w.shape == (3, 40)
+    for k in range(3):
+        np.testing.assert_allclose(site.rack_w[k],
+                                   row_w[site.rack_of == k].sum(axis=0),
+                                   rtol=1e-12)
+    np.testing.assert_allclose(site.site_w, row_w.sum(axis=0), rtol=1e-12)
+    np.testing.assert_allclose(site.site_w, site.rack_w.sum(axis=0), rtol=1e-12)
+
+
+# ---------------------------------------------------------------- registry
+def test_mc_scenarios_registered_and_serializable():
+    for name in MC_SCENARIO_FAMILY:
+        sc = get_scenario(name)
+        assert Scenario.from_json(sc.to_json()) == sc
+
+
+# --------------------------------------------------------------- ensembles
+def test_ensemble_determinism_and_worker_invariance():
+    spec1 = EnsembleSpec(SMALL, n_seeds=3, seed0=700, n_workers=1)
+    spec2 = EnsembleSpec(SMALL, n_seeds=3, seed0=700, n_workers=2)
+    a, b, c = run_ensemble(spec1), run_ensemble(spec1), run_ensemble(spec2)
+    for other in (b, c):
+        assert np.array_equal(a.power_frac, other.power_frac)
+        assert np.array_equal(a.brake_counts, other.brake_counts)
+        for ma, mo in zip(a.members, other.members):
+            assert ma.result.latencies == mo.result.latencies
+
+
+def test_batched_bit_parity_with_sequential_run_experiment():
+    """Acceptance: the batched engine reproduces a sequential
+    ``run_experiment`` loop bit-for-bit on a 4-member ensemble."""
+    spec = EnsembleSpec(SMALL, n_seeds=4, seed0=900, n_workers=2)
+    ens = run_ensemble(spec)
+    for m, sc in zip(ens.members, spec.member_scenarios(ens.budget_w)):
+        o = run_experiment(sc)
+        assert m.result.latencies == o.result.latencies
+        assert np.array_equal(m.result.power_w, o.result.power_w)
+        assert (m.result.n_brakes, m.result.cap_events, m.result.n_completed) \
+            == (o.result.n_brakes, o.result.cap_events, o.result.n_completed)
+        assert m.result.peak_power_frac == o.result.peak_power_frac
+
+
+def test_batched_reference_mode_matches_run_experiment_stats():
+    spec = EnsembleSpec(SMALL, n_seeds=2, seed0=900, n_workers=1,
+                        with_reference=True)
+    ens = run_ensemble(spec)
+    for m, sc in zip(ens.members, spec.member_scenarios(ens.budget_w)):
+        o = run_experiment(sc)
+        assert m.result.latencies == o.result.latencies
+        assert m.stats.summary() == o.stats.summary()
+        assert m.meets == o.meets
+
+
+def test_ensemble_distributional_telemetry():
+    ens = run_ensemble(EnsembleSpec(SMALL, n_seeds=3, seed0=700, n_workers=1))
+    counts, cdf = ens.brake_cdf()
+    assert len(counts) == 3 and cdf[-1] == 1.0
+    assert np.all(np.diff(cdf) >= 0)
+    levels = [0.2, 0.6, 1.0]
+    pe = ens.peak_exceedance(levels)
+    pw = ens.power_exceedance(levels)
+    for curve in (pe, pw):
+        assert np.all(curve >= 0.0) and np.all(curve <= 1.0)
+        assert np.all(np.diff(curve) <= 1e-12), "exceedance must be decreasing"
+    assert 0.0 <= ens.brake_prob() <= 1.0
+    assert ens.power_frac.shape[0] == 3
+
+
+def test_ensemble_grid_groups_by_scenario():
+    other = SMALL.with_(name="prov-small-nocap", policy=PolicySpec("no-cap"))
+    out = run_ensemble_grid([SMALL, other], n_seeds=2, seed0=700, n_workers=2)
+    assert set(out) == {"prov-small", "prov-small-nocap"}
+    solo = run_ensemble(EnsembleSpec(SMALL, n_seeds=2, seed0=700, n_workers=1))
+    assert np.array_equal(out["prov-small"].brake_counts, solo.brake_counts)
+    assert np.array_equal(out["prov-small"].power_frac, solo.power_frac)
+
+
+# ------------------------------------------------------------------ planner
+def test_planner_monotonic_in_risk_constraints():
+    """Acceptance: tighter risk bound -> fewer deployable servers."""
+    base = SMALL.with_fleet(added_frac=0.0)
+    kw = dict(n_seeds=2, seed0=810, max_added_frac=0.5, n_workers=2)
+    loose = plan_capacity(base, constraints=RiskConstraints(
+        max_brake_prob=1.0, max_slo_violation_prob=1.0), **kw)
+    mid = plan_capacity(base, constraints=RiskConstraints(
+        max_brake_prob=1.0, max_slo_violation_prob=1.0,
+        slo=SLO(hp_p50=10.0, hp_p99=10.0, lp_p50=10.0, lp_p99=10.0)), **kw)
+    tight = plan_capacity(base, constraints=RiskConstraints(
+        max_brake_prob=0.0, max_slo_violation_prob=0.0), **kw)
+    assert loose.capped and loose.safe_added_servers == 10
+    assert tight.safe_added_servers <= mid.safe_added_servers
+    assert mid.safe_added_servers <= loose.safe_added_servers
+    assert tight.safe_added_servers < loose.safe_added_servers
+    assert tight.probes, "planner must record its probes"
+    assert tight.budget_w == pytest.approx(loose.budget_w)
+
+
+def test_planner_reports_infeasible_at_zero():
+    # a budget so tight even the provisioned fleet brakes
+    base = SMALL.with_fleet(added_frac=0.0).with_(budget=1000.0)
+    plan = plan_capacity(base, n_seeds=2, seed0=810, n_workers=1,
+                         budget_w=1000.0)
+    assert plan.safe_added_servers == 0 and not plan.feasible_at_zero
+
+
+# ---------------------------------------------------------------- traces
+def test_replication_report_public_api():
+    sc = get_scenario("table2-baseline").with_(duration_s=6 * 3600.0)
+    res = run_experiment(sc).result
+    from benchmarks.common import SERVER, bloom_workloads
+    wls, shares = bloom_workloads()
+    rep = replication_report(res.power_t, res.power_w, wls, shares, SERVER,
+                             40, 40, occ_peak=sc.traffic.occ_peak,
+                             duration_s=sc.duration_s)
+    assert np.isfinite(rep.mape) and rep.mape >= 0.0
+    assert len(rep.sim_smooth) == len(rep.target_smooth) > 0

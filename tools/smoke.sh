@@ -14,4 +14,7 @@ python -m pytest -x -q
 echo "== table2 quick benchmark =="
 python -m benchmarks.run --quick --only table2
 
+echo "== capacity-planning quick benchmark =="
+python -m benchmarks.run --quick --only capacity
+
 echo "smoke OK"

@@ -1,0 +1,113 @@
+"""Fleet routing: load x routing-policy sweep under an oversubscribed
+cluster with one derated row (DESIGN.md §10).
+
+Validates the fleet layer's three claims:
+  * at the stressed load/envelope point, cap-state-aware routing meets the
+    Table-5 HP SLOs (p50 < 1%, p99 < 5% latency impact) where round-robin
+    violates them — and with far fewer powerbrakes than any power-blind
+    router (zero at the registered operating point);
+  * a single-row fleet reproduces the standalone ``RowSimulator`` result
+    bit-for-bit (the request-injection hook preserves event order);
+  * priority-aware admission control conserves requests exactly
+    (admitted + shed == offered) and sheds LP only.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, module_main, seeded
+from repro.experiments import get_scenario, run_experiment
+from repro.experiments.runner import build_workloads, resolve_budget
+from repro.experiments.scenario import RoutingSpec, TrafficSpec
+
+HP_P50_SLO = 0.01  # Table 5
+HP_P99_SLO = 0.05
+
+
+def _loads(base, quick: bool):
+    """(label, scenario) load points sharing the base-calibrated budget."""
+    wls, shares = build_workloads(base)
+    budget = resolve_budget(base, wls, shares, base.fleet.server())
+    stressed = base.with_(budget=budget)
+    points = [("design", stressed)]
+    if not quick:
+        light = stressed.with_(traffic=TrafficSpec(
+            occ_peak=0.50, gen_params={"trough": 0.43}))
+        points.insert(0, ("light", light))
+    return points
+
+
+def run(quick: bool = False) -> Bench:
+    b = Bench()
+    dur = 3 * 3600.0 if quick else None  # registered: 6 h
+    base = seeded(get_scenario("fleet-round-robin"))
+    if dur is not None:
+        base = base.with_(duration_s=dur)
+    routers = (["round-robin", "jsq", "cap-aware"] if quick else
+               ["round-robin", "jsq", "power-headroom", "cap-aware"])
+
+    summaries = {}
+    for load, sc_load in _loads(base, quick):
+        for router in routers:
+            sc = sc_load.with_routing(router)
+            t0 = time.perf_counter()
+            o = run_experiment(sc)
+            us = (time.perf_counter() - t0) * 1e6
+            s = o.stats.summary()
+            summaries[(load, router)] = (s, o)
+            b.add(f"fleet/{load}/{router}",
+                  f"hp_p99={s['hp_p99']:.1%} lp_p99={s['lp_p99']:.1%} "
+                  f"brakes={o.result.n_brakes} "
+                  f"shed={o.fleet.n_shed_total}", us, None)
+
+    # ---- headline: cap-aware recovers the HP SLO where RR violates it ------
+    rr, _ = summaries[("design", "round-robin")]
+    cap, cap_o = summaries[("design", "cap-aware")]
+    rr_violates = rr["hp_p99"] >= HP_P99_SLO
+    cap_meets = cap["hp_p50"] < HP_P50_SLO and cap["hp_p99"] < HP_P99_SLO
+    b.add("fleet/cap_aware_recovers_hp_slo",
+          f"round-robin hp_p99={rr['hp_p99']:.1%} (SLO 5%: "
+          f"{'violated' if rr_violates else 'met'}); cap-aware "
+          f"hp_p50={cap['hp_p50']:.2%} hp_p99={cap['hp_p99']:.1%} "
+          f"({'met' if cap_meets else 'violated'})",
+          0.0, rr_violates and cap_meets)
+    rr_brakes = summaries[("design", "round-robin")][1].result.n_brakes
+    b.add("fleet/cap_aware_brake_reduction",
+          f"powerbrakes at design load: round-robin={rr_brakes} "
+          f"cap-aware={cap_o.result.n_brakes}",
+          0.0, cap_o.result.n_brakes < rr_brakes)
+
+    # ---- single-row fleet == standalone RowSimulator, bit for bit ----------
+    solo_sc = seeded(get_scenario("fig14-plus30")).with_(duration_s=3600.0)
+    solo = run_experiment(solo_sc)
+    one = run_experiment(solo_sc.with_(routing=RoutingSpec("round-robin")))
+    fr, sr = one.fleet.row_results[0], solo.result
+    bit = (fr.latencies == sr.latencies
+           and np.array_equal(fr.power_w, sr.power_w)
+           and (fr.n_brakes, fr.cap_events) == (sr.n_brakes, sr.cap_events)
+           and one.stats.summary() == solo.stats.summary())
+    b.add("fleet/single_row_bit_parity",
+          f"1-row fleet == standalone RowSimulator: {bit}", 0.0, bit)
+
+    # ---- admission control: conservation + LP-only shedding ----------------
+    shed_sc = seeded(get_scenario("fleet-rr-shed"))
+    if dur is not None:
+        shed_sc = shed_sc.with_(duration_s=dur)
+    o = run_experiment(shed_sc.with_(compare_to_reference=False))
+    f = o.fleet
+    conserved = (f.n_admitted + f.n_shed_total == f.n_offered
+                 and f.n_shed.get("high", 0) == 0
+                 and f.n_shed.get("low", 0) > 0)
+    b.add("fleet/admission_conservation",
+          f"offered={f.n_offered} admitted={f.n_admitted} "
+          f"shed_lp={f.n_shed.get('low', 0)} shed_hp={f.n_shed.get('high', 0)} "
+          f"(admitted + shed == offered; LP only)",
+          0.0, conserved)
+    return b
+
+
+if __name__ == "__main__":
+    module_main(run)

@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.fig17_18_policy_comparison",
     "benchmarks.fig19_beyond_llm",
     "benchmarks.capacity_planning",
+    "benchmarks.fleet_routing",
     "benchmarks.phase_aware_savings",
     "benchmarks.kernel_micro",
     "benchmarks.roofline_table",

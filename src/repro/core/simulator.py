@@ -72,6 +72,9 @@ class SimResult:
     power_w: np.ndarray = field(default=None, repr=False)
     latencies: Dict[int, float] = field(default_factory=dict, repr=False)
     cap_events: int = 0
+    # time each completed request waited before prefill started (fleet
+    # routing attributes queueing delay per dispatch decision from this)
+    queue_delays: Dict[int, float] = field(default_factory=dict, repr=False)
 
     def spike(self, window_s: float) -> float:
         """Max increase of power (fraction of provisioned) over any window."""
@@ -241,6 +244,29 @@ class RowSimulator:
             self._push(r.t_arrival, "arrival", (r,))
         self._push(self.cfg.telemetry_s, "telemetry", ())
 
+    def inject(self, req: Request):
+        """Accept an externally dispatched request (the fleet routing layer).
+
+        The arrival rides the same event queue as trace arrivals, so a row
+        fed one request at a time by a dispatcher reproduces the standalone
+        trace run bit-for-bit (arrival times are continuous, so relative
+        event order is decided by time alone; tier-1 asserts the parity).
+        Must be called after ``start()``; the arrival must lie within the
+        row's duration. A row that already drained past its duration (its
+        next queued event overshot — possible in the final partial telemetry
+        window when duration is not a multiple of telemetry_s) is revived:
+        the overshoot event was discarded, but any event beyond the duration
+        is side-effect-free by definition, so processing the late arrival is
+        exactly what the standalone trace path would have done."""
+        if not self._started:
+            raise RuntimeError("inject() before start()")
+        if req.t_arrival > self.duration:
+            raise ValueError(
+                f"inject() at t={req.t_arrival:.1f} beyond the row duration "
+                f"({self.duration:.1f})")
+        self._past_end = False
+        self._push(req.t_arrival, "arrival", (req,))
+
     def advance_to(self, t_target: float) -> bool:
         """Process every event with t <= min(t_target, duration). Returns
         False once the row is past its duration (no more work will happen).
@@ -277,6 +303,15 @@ class RowSimulator:
             res.power_w = np.asarray(self._power_samples_w)
         return res
 
+    def candidates(self, wl: int, priority: str) -> List[_Server]:
+        """The server pool a request of (wl, priority) is served from: the
+        workload class AND the request's priority pool — HP requests must not
+        land on LP-capped servers — falling back to the whole class when the
+        priority sub-pool is empty. The fleet router scores rows against this
+        same pool (single source of the eligibility rule)."""
+        cands = [s for s in self.by_wl[wl] if s.priority == priority]
+        return cands if cands else self.by_wl[wl]
+
     def sample_telemetry(self, t: float) -> Telemetry:
         """The structured controller sample at time t (see core.telemetry)."""
         rack_frac, cluster_frac = self.group_fracs
@@ -298,11 +333,7 @@ class RowSimulator:
         res = self.result
         if kind == "arrival":
             (req,) = args
-            # route within the workload class AND the request's priority
-            # pool: HP requests must not land on LP-capped servers
-            cands = [s for s in self.by_wl[req.wl] if s.priority == req.priority]
-            if not cands:
-                cands = self.by_wl[req.wl]
+            cands = self.candidates(req.wl, req.priority)
             idle = [s for s in cands if s.state == "idle"]
             buf = [s for s in cands if s.state != "idle" and len(s.queue) < 1]
             if idle:
@@ -334,6 +365,7 @@ class RowSimulator:
                 actual = t - req.t_arrival
                 res.latency.add(req.priority, actual, ideal)
                 res.latencies[req.rid] = actual
+                res.queue_delays[req.rid] = s.t_service_start - req.t_arrival
                 res.n_completed += 1
                 res.served_tokens += req.out_tokens
                 self._start_next(s, t)

@@ -25,6 +25,7 @@ from repro.experiments.scenario import (
     WEEK,
     FleetSpec,
     PolicySpec,
+    RoutingSpec,
     Scenario,
     TelemetryConfig,
     TrafficSpec,
@@ -41,6 +42,7 @@ __all__ = [
     "ExperimentResult",
     "FleetSpec",
     "PolicySpec",
+    "RoutingSpec",
     "Scenario",
     "Telemetry",
     "TelemetryConfig",

@@ -52,6 +52,50 @@ class ClusterResult:
         return float(diffs.max()) if len(diffs) else 0.0
 
 
+class RackHierarchy:
+    """Row -> rack -> cluster budget bookkeeping, shared by
+    :class:`ClusterSimulator` and the fleet driver
+    (:class:`repro.fleet.fleet.FleetSimulator`): rack assignment, budget
+    defaulting (each level defaults to the sum of its children), stale
+    group-fraction publishing, and the vectorized [T, R] power folding."""
+
+    def __init__(self, rows: List[RowSimulator], *, rows_per_rack: int = 2,
+                 rack_budget_w: Optional[List[float]] = None,
+                 cluster_budget_w: Optional[float] = None):
+        self.rows_per_rack = max(1, rows_per_rack)
+        self.n_racks = math.ceil(len(rows) / self.rows_per_rack)
+        self.rack_of = np.asarray([i // self.rows_per_rack for i in range(len(rows))])
+        self.row_budget_w = np.asarray([r.provisioned_w for r in rows], float)
+        if rack_budget_w is None:
+            rack_budget_w = [float(self.row_budget_w[self.rack_of == k].sum())
+                             for k in range(self.n_racks)]
+        self.rack_budget_w = np.asarray(rack_budget_w, float)
+        self.cluster_budget_w = float(cluster_budget_w
+                                      if cluster_budget_w is not None
+                                      else self.rack_budget_w.sum())
+
+    def publish_group_fracs(self, rows: List[RowSimulator], row_w: np.ndarray):
+        """Push rack/cluster power fractions into every row's telemetry."""
+        rack_w = np.zeros(self.n_racks)
+        np.add.at(rack_w, self.rack_of, row_w)
+        rack_frac = rack_w / self.rack_budget_w
+        cluster_frac = float(row_w.sum() / self.cluster_budget_w)
+        for i, r in enumerate(rows):
+            r.group_fracs = (float(rack_frac[self.rack_of[i]]), cluster_frac)
+        return rack_frac, cluster_frac
+
+    def fold(self, power: np.ndarray):
+        """[T, R] watts -> (row_frac [T,R], rack_frac [T,K], cluster_frac
+        [T]), each as fractions of the level's budget."""
+        row_frac = power / self.row_budget_w[None, :] if len(power) else power
+        rack_w = np.zeros((len(power), self.n_racks))
+        for k in range(self.n_racks):
+            rack_w[:, k] = power[:, self.rack_of == k].sum(axis=1)
+        rack_frac = rack_w / self.rack_budget_w[None, :] if len(power) else rack_w
+        cluster_frac = power.sum(axis=1) / self.cluster_budget_w
+        return row_frac, rack_frac, cluster_frac
+
+
 class ClusterSimulator:
     """Lockstep N rows under row/rack/cluster budgets.
 
@@ -67,27 +111,13 @@ class ClusterSimulator:
         if not rows:
             raise ValueError("ClusterSimulator needs at least one row")
         self.rows = rows
-        self.rows_per_rack = max(1, rows_per_rack)
-        self.n_racks = math.ceil(len(rows) / self.rows_per_rack)
-        self.rack_of = np.asarray([i // self.rows_per_rack for i in range(len(rows))])
-        self.row_budget_w = np.asarray([r.provisioned_w for r in rows], float)
-        if rack_budget_w is None:
-            rack_budget_w = [float(self.row_budget_w[self.rack_of == k].sum())
-                             for k in range(self.n_racks)]
-        self.rack_budget_w = np.asarray(rack_budget_w, float)
-        self.cluster_budget_w = float(cluster_budget_w
-                                      if cluster_budget_w is not None
-                                      else self.rack_budget_w.sum())
+        self.hierarchy = RackHierarchy(rows, rows_per_rack=rows_per_rack,
+                                       rack_budget_w=rack_budget_w,
+                                       cluster_budget_w=cluster_budget_w)
         self.telemetry_s = float(telemetry_s or rows[0].cfg.telemetry_s)
 
     def _publish_group_fracs(self, row_w: np.ndarray):
-        rack_w = np.zeros(self.n_racks)
-        np.add.at(rack_w, self.rack_of, row_w)
-        rack_frac = rack_w / self.rack_budget_w
-        cluster_frac = float(row_w.sum() / self.cluster_budget_w)
-        for i, r in enumerate(self.rows):
-            r.group_fracs = (float(rack_frac[self.rack_of[i]]), cluster_frac)
-        return rack_frac, cluster_frac
+        return self.hierarchy.publish_group_fracs(self.rows, row_w)
 
     def run(self) -> ClusterResult:
         rows = self.rows
@@ -118,12 +148,7 @@ class ClusterSimulator:
         power = (np.stack(samples) if samples
                  else np.zeros((0, len(rows))))  # [T, R] watts
         power_t = np.asarray(ticks)
-        row_frac = power / self.row_budget_w[None, :] if len(power) else power
-        rack_w = np.zeros((len(power), self.n_racks))
-        for k in range(self.n_racks):
-            rack_w[:, k] = power[:, self.rack_of == k].sum(axis=1)
-        rack_frac = rack_w / self.rack_budget_w[None, :] if len(power) else rack_w
-        cluster_frac = power.sum(axis=1) / self.cluster_budget_w
+        row_frac, rack_frac, cluster_frac = self.hierarchy.fold(power)
         return ClusterResult(
             row_results=row_results,
             power_t=power_t,

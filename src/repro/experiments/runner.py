@@ -36,7 +36,9 @@ BASELINE_PEAK_UTIL = 0.79  # Table 2: inference rows peak at 79% of provisioned
 @dataclass
 class ExperimentResult:
     """Outcome of one scenario run (field-compatible with the old
-    ``EvalOutcome`` for the row path; cluster runs add ``cluster``)."""
+    ``EvalOutcome`` for the row path; cluster runs add ``cluster``, routed
+    fleet runs add ``fleet`` — for those, ``result`` is the cluster-shaped
+    merge from :func:`repro.fleet.as_sim_result`)."""
 
     n_servers: int
     added_frac: float
@@ -49,6 +51,7 @@ class ExperimentResult:
     scenario: Optional[Scenario] = None
     budget_w: Optional[float] = None
     cluster: Optional[ClusterResult] = None
+    fleet: Optional[object] = None  # repro.fleet.FleetResult
 
 
 def build_workloads(scenario: Scenario) -> Tuple[List[WorkloadClass], List[float]]:
@@ -171,6 +174,8 @@ def run_experiment(scenario: Scenario, *,
     wls, shares = workloads if workloads is not None else build_workloads(scenario)
     budget_w = resolve_budget(scenario, wls, shares, server)
     mk = policy_factory if policy_factory is not None else scenario.policy.build
+    if scenario.routing is not None:
+        return _run_fleet(scenario, wls, shares, server, budget_w, mk)
     if scenario.fleet.n_rows > 1:
         return _run_cluster(scenario, wls, shares, server, budget_w, mk)
     return _run_row(scenario, wls, shares, server, budget_w, mk)
@@ -183,12 +188,26 @@ def _throughput(reqs, prios, res: SimResult, prio: str) -> float:
     return got / max(1, tot)
 
 
+def _reference_stats(reqs, res: SimResult, ref: Optional[SimResult]):
+    """(stats, throughput_ratio_hp, throughput_ratio_lp) for a policy run,
+    against its paired uncapped reference when one ran (the paper's
+    capping-impact-only comparison), else raw ideal-relative stats."""
+    if ref is None:
+        return res.latency, None, None
+    prios = {r.rid: r.priority for r in reqs}
+    stats = impact_vs_reference(res.latencies, ref.latencies, prios)
+    tr_hp = (_throughput(reqs, prios, res, "high")
+             / max(1e-9, _throughput(reqs, prios, ref, "high")))
+    tr_lp = (_throughput(reqs, prios, res, "low")
+             / max(1e-9, _throughput(reqs, prios, ref, "low")))
+    return stats, tr_hp, tr_lp
+
+
 def _run_row(scenario: Scenario, wls, shares, server,
              budget_w: Optional[float], policy_factory) -> ExperimentResult:
     fleet = scenario.fleet
     n = fleet.n_servers
     reqs = row_trace(scenario, wls, shares, n, seed=scenario.seed)
-    prios = {r.rid: r.priority for r in reqs}
 
     ref = None
     if scenario.compare_to_reference:
@@ -200,14 +219,7 @@ def _run_row(scenario: Scenario, wls, shares, server,
     res = row_sim(scenario, wls, shares, server, budget_w, policy_factory(),
                   reqs).run()
 
-    if ref is not None:
-        stats = impact_vs_reference(res.latencies, ref.latencies, prios)
-        tr_hp = (_throughput(reqs, prios, res, "high")
-                 / max(1e-9, _throughput(reqs, prios, ref, "high")))
-        tr_lp = (_throughput(reqs, prios, res, "low")
-                 / max(1e-9, _throughput(reqs, prios, ref, "low")))
-    else:
-        stats, tr_hp, tr_lp = res.latency, None, None
+    stats, tr_hp, tr_lp = _reference_stats(reqs, res, ref)
     return ExperimentResult(
         n_servers=n,
         added_frac=n / fleet.n_provisioned - 1.0,
@@ -256,6 +268,38 @@ def _run_cluster(scenario: Scenario, wls, shares, server,
         meets=meets_slo(stats, cres.n_brakes, scenario.slo),
         throughput_ratio_hp=None, throughput_ratio_lp=None,
         scenario=scenario, budget_w=budget_w, cluster=cres,
+    )
+
+
+def _run_fleet(scenario: Scenario, wls, shares, server,
+               budget_w: Optional[float], policy_factory) -> ExperimentResult:
+    """Routed fleet run: one cluster-wide arrival process dispatched over
+    ``n_rows`` rows by the scenario's RoutingSpec (repro.fleet). The
+    reference, when requested, is the uncapped twin fleet under the same
+    router on the same trace, so stats isolate power-management impact from
+    the routing policy's own queueing behavior."""
+    # imported here: repro.fleet sits above repro.experiments in the stack
+    from repro.fleet.fleet import as_sim_result, build_fleet, fleet_trace
+
+    fleet = scenario.fleet
+    reqs = fleet_trace(scenario, wls, shares)
+    fres = build_fleet(scenario, wls, shares, server, budget_w,
+                       policy_factory, reqs).run()
+    res = as_sim_result(fres)
+
+    ref = None
+    if scenario.compare_to_reference:
+        ref_fres = build_fleet(scenario, wls, shares, server, budget_w,
+                               policy_factory, reqs, reference=True).run()
+        ref = as_sim_result(ref_fres)
+    stats, tr_hp, tr_lp = _reference_stats(reqs, res, ref)
+    return ExperimentResult(
+        n_servers=fleet.n_servers * fleet.n_rows,
+        added_frac=fleet.n_servers / fleet.n_provisioned - 1.0,
+        stats=stats, result=res, ref_result=ref,
+        meets=meets_slo(stats, fres.n_brakes, scenario.slo),
+        throughput_ratio_hp=tr_hp, throughput_ratio_lp=tr_lp,
+        scenario=scenario, budget_w=budget_w, fleet=fres,
     )
 
 

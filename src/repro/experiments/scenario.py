@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import json
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 from repro.core.policy import NoCap, OneThreshold, PolcaPolicy, PredictivePolcaPolicy
 from repro.core.power_model import A100, TPU_V5E, DevicePower, ServerPower
@@ -62,6 +62,9 @@ class FleetSpec:
     model: str = "bloom-176b"
     device: str = A100.name
     n_devices_per_server: int = 8
+    # per-row budget multipliers (heterogeneous PDU headroom) for routed
+    # fleet runs; None = every row gets the full resolved budget
+    row_budget_fracs: Optional[Tuple[float, ...]] = None
 
     @property
     def n_servers(self) -> int:
@@ -87,6 +90,22 @@ class TrafficSpec:
     priority_mix_override: Optional[float] = None  # force every class's HP mix
     generator: str = "diurnal"
     gen_params: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class RoutingSpec:
+    """Fleet serving configuration: how a cluster-wide arrival process lands
+    on rows. ``router``/``admission`` name entries in the ``repro.fleet``
+    registries (round-robin, jsq, power-headroom, cap-aware / admit-all,
+    shed-lp); params pass to the builders verbatim, so the spec round-trips
+    through JSON. A Scenario carrying a RoutingSpec runs the
+    :class:`~repro.fleet.fleet.FleetSimulator` path in ``run_experiment``
+    instead of per-row pre-baked traces."""
+
+    router: str = "round-robin"
+    params: Dict[str, Any] = field(default_factory=dict)
+    admission: str = "admit-all"
+    admission_params: Dict[str, Any] = field(default_factory=dict)
 
 
 @dataclass(frozen=True)
@@ -116,6 +135,9 @@ class Scenario:
     # "nominal" (n_provisioned x server rating), or explicit watts
     budget: Union[str, float] = "calibrated"
     compare_to_reference: bool = True  # diff latencies vs an uncapped run
+    # fleet serving: a cluster-wide arrival process dispatched by a router
+    # (repro.fleet) instead of pre-baked per-row traces
+    routing: Optional[RoutingSpec] = None
 
     def with_(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
@@ -126,6 +148,13 @@ class Scenario:
     def with_policy(self, kind: str, **params) -> "Scenario":
         return self.with_(policy=PolicySpec(kind, params))
 
+    def with_routing(self, router: str, **params) -> "Scenario":
+        """Same scenario under a different routing policy (admission spec is
+        preserved when one is already set)."""
+        prev = self.routing or RoutingSpec()
+        return self.with_(routing=dataclasses.replace(
+            prev, router=router, params=params))
+
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -133,11 +162,16 @@ class Scenario:
     @classmethod
     def from_dict(cls, d: dict) -> "Scenario":
         d = dict(d)
-        d["fleet"] = FleetSpec(**d.get("fleet", {}))
+        fleet = dict(d.get("fleet", {}))
+        if fleet.get("row_budget_fracs") is not None:
+            fleet["row_budget_fracs"] = tuple(fleet["row_budget_fracs"])
+        d["fleet"] = FleetSpec(**fleet)
         d["policy"] = PolicySpec(**d.get("policy", {}))
         d["traffic"] = TrafficSpec(**d.get("traffic", {}))
         d["telemetry"] = TelemetryConfig(**d.get("telemetry", {}))
         d["slo"] = SLO(**d.get("slo", {}))
+        if d.get("routing") is not None:
+            d["routing"] = RoutingSpec(**d["routing"])
         return cls(**d)
 
     def to_json(self) -> str:
@@ -229,3 +263,36 @@ register_scenario(Scenario(
     budget="nominal",
     compare_to_reference=False,
 ))
+
+# Fleet serving scenarios (repro.fleet): one cluster-wide arrival process
+# dispatched over an oversubscribed 6-row cluster whose last row sits on a
+# 30%-derated PDU (row_budget_fracs) under sustained near-peak traffic — the
+# configuration where routing policy decides whether the HP SLO survives:
+# round-robin keeps feeding the derated row (brakes, blown HP p99) while
+# cap-state-aware routing water-fills around it inside the same envelope.
+# Variants swap the router only, so policy comparisons share the exact same
+# trace and envelope.
+_FLEET_BASE = Scenario(
+    name="fleet-round-robin",
+    duration_s=DAY / 4,
+    fleet=FleetSpec(n_provisioned=20, added_frac=0.05, n_rows=6,
+                    rows_per_rack=2,
+                    row_budget_fracs=(1.0, 1.0, 1.0, 1.0, 1.0, 0.7)),
+    policy=PolicySpec("polca"),
+    traffic=TrafficSpec(occ_peak=0.62, gen_params={"trough": 0.55}),
+    routing=RoutingSpec("round-robin"),
+    budget="calibrated",
+)
+register_scenario(_FLEET_BASE)
+register_scenario(_FLEET_BASE.with_routing("jsq").with_(name="fleet-jsq"))
+register_scenario(_FLEET_BASE.with_routing("power-headroom")
+                  .with_(name="fleet-power-headroom"))
+register_scenario(_FLEET_BASE.with_routing("cap-aware")
+                  .with_(name="fleet-cap-aware"))
+# admission-control variant: round-robin keeps overloading the derated row
+# (power emergencies), so LP shedding actually engages — the demo that shed
+# accounting is exact and HP is never shed
+register_scenario(_FLEET_BASE.with_(
+    name="fleet-rr-shed",
+    routing=RoutingSpec("round-robin", admission="shed-lp",
+                        admission_params={"shed_above": 0.97})))

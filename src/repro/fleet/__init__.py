@@ -1,0 +1,68 @@
+"""Fleet serving layer: power-aware request routing and admission control
+over oversubscribed clusters (DESIGN.md §10).
+
+``FleetSimulator`` drives M rows from one cluster-wide arrival process;
+``router`` provides pluggable routing policies (round-robin, join-shortest-
+queue, power-headroom, cap-state-aware) plus priority-aware admission
+control; ``metrics`` attributes SLO impact and queueing delay per routing
+decision. Scenarios opt in declaratively via
+:class:`~repro.experiments.scenario.RoutingSpec`.
+"""
+
+from repro.fleet.fleet import (
+    FleetResult,
+    FleetSimulator,
+    RoutingDecision,
+    as_sim_result,
+    build_fleet,
+    fleet_trace,
+    row_budgets,
+)
+from repro.fleet.metrics import (
+    DecisionGroupStats,
+    RoutingAttribution,
+    attribute_routing,
+)
+from repro.fleet.router import (
+    ADMISSION_BUILDERS,
+    ROUTER_BUILDERS,
+    AdmissionController,
+    AdmitAll,
+    CapAwareRouter,
+    FleetView,
+    JoinShortestQueueRouter,
+    PowerHeadroomRouter,
+    RoundRobinRouter,
+    Router,
+    RowView,
+    ShedLowPriority,
+    build_admission,
+    build_router,
+)
+
+__all__ = [
+    "ADMISSION_BUILDERS",
+    "ROUTER_BUILDERS",
+    "AdmissionController",
+    "AdmitAll",
+    "CapAwareRouter",
+    "DecisionGroupStats",
+    "FleetResult",
+    "FleetSimulator",
+    "FleetView",
+    "JoinShortestQueueRouter",
+    "PowerHeadroomRouter",
+    "RoundRobinRouter",
+    "Router",
+    "RoutingAttribution",
+    "RoutingDecision",
+    "RowView",
+    "ShedLowPriority",
+    "as_sim_result",
+    "attribute_routing",
+    "build_admission",
+    "build_fleet",
+    "build_router",
+    "fleet_trace",
+    "row_budgets",
+]

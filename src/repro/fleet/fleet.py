@@ -1,0 +1,357 @@
+"""Request-level fleet serving: one arrival process, M rows, a router.
+
+The provisioning layer answers "how many servers fit the envelope"; this
+layer answers "how does traffic *land* on those rows once some of them are
+frequency-capped". :class:`FleetSimulator` drives M
+:class:`~repro.core.simulator.RowSimulator`\\ s from a single cluster-wide
+arrival stream (seeded through the same ``core.traces`` generator registry
+the per-row path uses): each arrival is first passed through an admission
+controller (LP shedding under power emergencies), then placed on a row by a
+pluggable :class:`~repro.fleet.router.Router`, and injected into that row's
+event queue via ``RowSimulator.inject``. Rows keep their own policies,
+budgets, and event queues; the fleet driver interleaves arrival dispatch
+with the telemetry-grid lockstep the ClusterSimulator established, publishing
+one-tick-stale rack/cluster power fractions into every row before each tick.
+
+Drive modes mirror ``RowSimulator``: ``run()`` is ``start`` +
+``advance_to(duration)`` + ``finalize``, and ``advance_to`` is
+stride-invariant, so the Monte-Carlo engine locksteps fleet members exactly
+like row members. A single-row fleet under any router replays the standalone
+``RowSimulator`` bit-for-bit on the same scenario (the cluster-wide trace
+degenerates to the row trace, and injected arrivals reproduce the trace-fed
+event order — tier-1-asserted).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.simulator import Request, RowSimulator, SimConfig, SimResult
+from repro.core.slo import LatencyStats
+from repro.fleet.router import (
+    AdmissionController,
+    AdmitAll,
+    FleetView,
+    Router,
+    RowView,
+)
+
+
+@dataclass(frozen=True)
+class RoutingDecision:
+    """One dispatch: which row got the request (``row == -1`` means shed) and
+    the router's reason tag. This is the join key for per-decision SLO and
+    queueing-delay attribution (``fleet.metrics``)."""
+
+    rid: int
+    t: float
+    wl: int
+    priority: str
+    row: int
+    reason: str
+
+
+@dataclass
+class FleetResult:
+    """Structured fleet telemetry: per-row results, the full decision log,
+    shed accounting, and cluster-level power series on the telemetry grid."""
+
+    row_results: List[SimResult]
+    decisions: List[RoutingDecision] = field(repr=False)
+    n_offered: int = 0
+    n_admitted: int = 0
+    n_shed: Dict[str, int] = field(default_factory=dict)  # per priority
+    power_t: np.ndarray = field(default=None, repr=False)  # [T]
+    row_power_frac: np.ndarray = field(default=None, repr=False)  # [T, R]
+    rack_power_frac: np.ndarray = field(default=None, repr=False)  # [T, K]
+    cluster_power_frac: np.ndarray = field(default=None, repr=False)  # [T]
+    shed_cum: np.ndarray = field(default=None, repr=False)  # [T] total shed
+    n_brakes: int = 0
+    peak_cluster_frac: float = 0.0
+    mean_cluster_frac: float = 0.0
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.row_results)
+
+    @property
+    def n_shed_total(self) -> int:
+        return sum(self.n_shed.values())
+
+    def merged_latencies(self) -> Dict[int, float]:
+        """rid -> latency across all rows (rids are unique cluster-wide: the
+        fleet serves one arrival stream)."""
+        out: Dict[int, float] = {}
+        for rr in self.row_results:
+            out.update(rr.latencies)
+        return out
+
+    def merged_queue_delays(self) -> Dict[int, float]:
+        out: Dict[int, float] = {}
+        for rr in self.row_results:
+            out.update(rr.queue_delays)
+        return out
+
+
+def as_sim_result(fres: FleetResult) -> SimResult:
+    """Collapse a fleet run into the row-shaped ``SimResult`` the ensemble
+    engine and SLO gates consume: pooled latencies, summed counters, and the
+    cluster-level power series (fractions of the cluster budget)."""
+    lat = LatencyStats(
+        hp_impacts=[x for rr in fres.row_results for x in rr.latency.hp_impacts],
+        lp_impacts=[x for rr in fres.row_results for x in rr.latency.lp_impacts])
+    return SimResult(
+        latency=lat,
+        n_brakes=fres.n_brakes,
+        n_dropped=sum(rr.n_dropped for rr in fres.row_results) + fres.n_shed_total,
+        n_completed=sum(rr.n_completed for rr in fres.row_results),
+        served_tokens=sum(rr.served_tokens for rr in fres.row_results),
+        peak_power_frac=fres.peak_cluster_frac,
+        mean_power_frac=fres.mean_cluster_frac,
+        power_t=fres.power_t,
+        power_w=fres.cluster_power_frac,
+        latencies=fres.merged_latencies(),
+        cap_events=sum(rr.cap_events for rr in fres.row_results),
+        queue_delays=fres.merged_queue_delays(),
+    )
+
+
+class FleetSimulator:
+    """Dispatch one cluster-wide arrival stream over M rows.
+
+    ``rows`` must be constructed with empty request lists (arrivals come from
+    the dispatcher); ``requests`` must be sorted by arrival time (the trace
+    generators emit them sorted). Rack/cluster budgets default to the sum of
+    their children's budgets, exactly like :class:`ClusterSimulator`.
+    """
+
+    def __init__(self, rows: List[RowSimulator], requests: List[Request],
+                 router: Router, admission: Optional[AdmissionController] = None,
+                 *, rows_per_rack: int = 2,
+                 rack_budget_w: Optional[List[float]] = None,
+                 cluster_budget_w: Optional[float] = None,
+                 telemetry_s: Optional[float] = None):
+        if not rows:
+            raise ValueError("FleetSimulator needs at least one row")
+        from repro.experiments.cluster import RackHierarchy
+        self.rows = rows
+        self.requests = requests
+        self.router = router
+        self.admission = admission if admission is not None else AdmitAll()
+        self.hierarchy = RackHierarchy(rows, rows_per_rack=rows_per_rack,
+                                       rack_budget_w=rack_budget_w,
+                                       cluster_budget_w=cluster_budget_w)
+        self.telemetry_s = float(telemetry_s or rows[0].cfg.telemetry_s)
+        self.duration = max(r.duration for r in rows)
+
+        self.decisions: List[RoutingDecision] = []
+        self.n_shed: Dict[str, int] = {"high": 0, "low": 0}
+        self._started = False
+        self._i = 0  # next undispatched request
+        self._next_tick = self.telemetry_s
+        self._prev_row_w: Optional[np.ndarray] = None
+        self._stale_cluster_frac = 0.0
+        self._ticks: List[float] = []
+        self._samples: List[np.ndarray] = []
+        self._shed_cum: List[int] = []
+        # index-only placeholder views for routers with needs_views=False
+        self._blind_views = [
+            RowView(index=i, power_frac=0.0, headroom_w=0.0, braked=False,
+                    t1_capped=False, t2_capped=False, hp_capped=False,
+                    pool_size=1, pool_idle=1, pool_queued=0)
+            for i in range(len(rows))]
+
+    # ------------------------------------------------------------------
+    def _advance_rows(self, t: float):
+        # no alive-gating: a drained row returns immediately, and inject()
+        # can revive one inside the final partial telemetry window
+        for r in self.rows:
+            r.advance_to(min(t, r.duration))
+
+    def _publish_group_fracs(self, row_w: np.ndarray):
+        _, cluster_frac = self.hierarchy.publish_group_fracs(self.rows, row_w)
+        self._stale_cluster_frac = cluster_frac
+
+    def _view(self, i: int, req: Request) -> RowView:
+        row = self.rows[i]
+        cands = row.candidates(req.wl, req.priority)
+        pol = row.policy
+        return RowView(
+            index=i,
+            power_frac=row.row_power / row.provisioned_w,
+            headroom_w=row.provisioned_w - row.row_power,
+            braked=bool(getattr(pol, "braked", False)),
+            t1_capped=bool(getattr(pol, "t1_capped", False)),
+            t2_capped=bool(getattr(pol, "t2_capped", False)),
+            hp_capped=bool(getattr(pol, "hp_capped", False)),
+            pool_size=len(cands),
+            pool_idle=sum(1 for s in cands if s.state == "idle"),
+            pool_queued=sum(len(s.queue) for s in cands),
+        )
+
+    def _fleet_view(self, t: float) -> FleetView:
+        n_braked = sum(1 for r in self.rows
+                       if getattr(r.policy, "braked", False))
+        return FleetView(t=t, cluster_frac=self._stale_cluster_frac,
+                         n_braked=n_braked)
+
+    def _dispatch(self, req: Request):
+        # rows are current as of req.t_arrival (the driver advances them to
+        # the arrival instant before routing)
+        if self.admission.needs_view and not self.admission.admit(
+                req, self._fleet_view(req.t_arrival)):
+            self.n_shed[req.priority] = self.n_shed.get(req.priority, 0) + 1
+            self.decisions.append(RoutingDecision(
+                req.rid, req.t_arrival, req.wl, req.priority, -1,
+                f"shed/{self.admission.name}"))
+            return
+        # state-blind routers skip the per-pool snapshot scans entirely
+        views = ([self._view(i, req) for i in range(len(self.rows))]
+                 if self.router.needs_views else self._blind_views)
+        row, reason = self.router.route(req, views)
+        self.decisions.append(RoutingDecision(
+            req.rid, req.t_arrival, req.wl, req.priority, row, reason))
+        self.rows[row].inject(req)
+
+    # ------------------------------------------------------------------
+    def start(self):
+        if self._started:
+            return
+        self._started = True
+        for r in self.rows:
+            r.start()
+
+    def advance_to(self, t_target: float) -> bool:
+        """Process every arrival and telemetry tick with t <= t_target, in
+        time order. Returns False once all arrivals are dispatched and the
+        tick grid is past the fleet duration (no more driver work)."""
+        t_target = min(t_target, self.duration)
+        while True:
+            t_arr = (self.requests[self._i].t_arrival
+                     if self._i < len(self.requests) else math.inf)
+            t_next = min(t_arr, self._next_tick)
+            if t_next > t_target:
+                break
+            if t_arr <= self._next_tick:
+                self._advance_rows(t_arr)
+                self._dispatch(self.requests[self._i])
+                self._i += 1
+            else:
+                # telemetry tick: publish the previous tick's aggregates
+                # (one tick stale, matching ClusterSimulator), advance rows
+                # through the tick, then sample
+                if self._prev_row_w is not None:
+                    self._publish_group_fracs(self._prev_row_w)
+                self._advance_rows(self._next_tick)
+                row_w = np.asarray([r.row_power for r in self.rows], float)
+                self._ticks.append(self._next_tick)
+                self._samples.append(row_w)
+                self._shed_cum.append(sum(self.n_shed.values()))
+                self._prev_row_w = row_w
+                self._next_tick += self.telemetry_s
+        return not (self._i >= len(self.requests)
+                    and self._next_tick > self.duration)
+
+    def finalize(self) -> FleetResult:
+        for r in self.rows:  # drain events between the last tick and duration
+            r.advance_to(r.duration)
+        row_results = [r.finalize() for r in self.rows]
+        power = (np.stack(self._samples) if self._samples
+                 else np.zeros((0, len(self.rows))))  # [T, R] watts
+        power_t = np.asarray(self._ticks)
+        row_frac, rack_frac, cluster_frac = self.hierarchy.fold(power)
+        return FleetResult(
+            row_results=row_results,
+            decisions=self.decisions,
+            n_offered=len(self.requests),
+            n_admitted=len(self.requests) - sum(self.n_shed.values()),
+            n_shed=dict(self.n_shed),
+            power_t=power_t,
+            row_power_frac=row_frac,
+            rack_power_frac=rack_frac,
+            cluster_power_frac=cluster_frac,
+            shed_cum=np.asarray(self._shed_cum),
+            n_brakes=sum(rr.n_brakes for rr in row_results),
+            peak_cluster_frac=float(cluster_frac.max()) if len(cluster_frac) else 0.0,
+            mean_cluster_frac=float(cluster_frac.mean()) if len(cluster_frac) else 0.0,
+        )
+
+    def run(self) -> FleetResult:
+        self.start()
+        self.advance_to(self.duration)
+        return self.finalize()
+
+
+# ---------------------------------------------------------------------------
+# scenario-driven construction (shared by run_experiment and the MC engine,
+# so batched fleet members stay bit-identical with sequential runs)
+# ---------------------------------------------------------------------------
+
+def fleet_trace(scenario, workloads, shares) -> List[Request]:
+    """The single cluster-wide arrival stream for a fleet scenario: the
+    row-trace generator sized for the whole fleet (n_rows x n_servers busy
+    servers drive the occupancy-matched Poisson rates). A one-row fleet
+    therefore gets exactly the standalone row trace."""
+    from repro.experiments.runner import row_trace
+    n_total = scenario.fleet.n_rows * scenario.fleet.n_servers
+    return row_trace(scenario, workloads, shares, n_total, seed=scenario.seed)
+
+
+def row_budgets(scenario, budget_w: Optional[float], server) -> List[Optional[float]]:
+    """Per-row budgets in watts. ``FleetSpec.row_budget_fracs`` scales each
+    row's share of the envelope (heterogeneous PDU headroom); None entries
+    keep the RowSimulator nominal default."""
+    fleet = scenario.fleet
+    fracs = fleet.row_budget_fracs
+    if fracs is None:
+        return [budget_w] * fleet.n_rows
+    if len(fracs) != fleet.n_rows:
+        raise ValueError(
+            f"row_budget_fracs has {len(fracs)} entries for "
+            f"{fleet.n_rows} rows")
+    base = (budget_w if budget_w is not None
+            else fleet.n_provisioned * server.provisioned_w)
+    return [float(base) * float(f) for f in fracs]
+
+
+def build_fleet(scenario, workloads, shares, server,
+                budget_w: Optional[float], policy_factory,
+                requests: List[Request], *, reference: bool = False) -> FleetSimulator:
+    """A FleetSimulator for ``scenario`` (which must carry a RoutingSpec).
+
+    ``reference=True`` builds the uncapped twin: NoCap policies on
+    effectively-infinite row budgets, same router and admission spec (no
+    emergency ever triggers, so nothing is shed) — the paper's
+    capping-impact-only baseline, fleet-shaped.
+    """
+    from repro.core.policy import NoCap
+    from repro.experiments.runner import row_sim
+    from repro.fleet.router import build_admission, build_router
+
+    spec = scenario.routing
+    if spec is None:
+        raise ValueError(f"scenario {scenario.name!r} has no RoutingSpec")
+    fleet = scenario.fleet
+    n = fleet.n_servers
+    rows = []
+    if reference:
+        for i in range(fleet.n_rows):
+            rows.append(RowSimulator(
+                workloads, server, n, 10 * n, NoCap(), [], shares,
+                SimConfig(power_scale=scenario.power_scale, record_power=False),
+                duration=scenario.duration_s, row_index=i))
+    else:
+        budgets = row_budgets(scenario, budget_w, server)
+        for i in range(fleet.n_rows):
+            rows.append(row_sim(scenario, workloads, shares, server,
+                                budgets[i], policy_factory(), [], row_index=i))
+    return FleetSimulator(
+        rows, requests,
+        router=build_router(spec.router, spec.params),
+        admission=build_admission(spec.admission, spec.admission_params),
+        rows_per_rack=fleet.rows_per_rack,
+        telemetry_s=scenario.telemetry.telemetry_s)

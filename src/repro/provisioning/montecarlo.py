@@ -26,6 +26,13 @@ impacts are then relative to the unqueued uncapped ideal). Set
 ``EnsembleSpec(with_reference=True)`` for the paper's paired-reference SLO
 comparison (the capacity planner does): references run in the same batched
 pass.
+
+Members are not restricted to single rows: a scenario carrying a
+``RoutingSpec`` runs as a whole routed fleet
+(:class:`~repro.fleet.fleet.FleetSimulator`, DESIGN.md §10) through the same
+lockstep protocol, with its cluster-level power series and pooled latencies
+feeding the distributional statistics — so capacity planning runs over
+multi-row fleets exactly as over rows.
 """
 
 from __future__ import annotations
@@ -123,9 +130,11 @@ class EnsembleResult:
         return len(self.members)
 
     # -- powerbrake distribution -------------------------------------------
-    def brake_prob(self) -> float:
-        """P[a member experiences >= 1 powerbrake]."""
-        return float(np.mean(self.brake_counts > 0))
+    def brake_prob(self, max_brakes: int = 0) -> float:
+        """P[a member experiences more than ``max_brakes`` powerbrakes].
+        The default (0) is the zero-tolerance P[>= 1 brake]; the planner
+        passes its ``RiskConstraints.max_brakes`` budget here."""
+        return float(np.mean(self.brake_counts > max_brakes))
 
     def brake_cdf(self) -> Tuple[np.ndarray, np.ndarray]:
         """(counts, P[brakes <= count]) — the powerbrake-count CDF."""
@@ -195,30 +204,56 @@ def _cached_workloads(scenario: Scenario):
     return _WLS_CACHE[key]
 
 
+def _member_budget_w(sc: Scenario) -> Optional[float]:
+    if sc.budget == "nominal":
+        return None  # RowSimulator default: n_provisioned x rating
+    if isinstance(sc.budget, (int, float)):
+        return float(sc.budget)
+    raise ValueError(
+        f"member {sc.name!r} reached the batch runner with budget="
+        f"{sc.budget!r}; resolve it to watts first (run_ensemble "
+        "pins the base scenario's resolved budget across members)")
+
+
+def _finalize_member(sim) -> SimResult:
+    """Row members finalize to a SimResult directly; fleet members collapse
+    their FleetResult into the cluster-shaped equivalent."""
+    res = sim.finalize()
+    if isinstance(res, SimResult):
+        return res
+    from repro.fleet.fleet import as_sim_result
+    return as_sim_result(res)
+
+
 def _run_shard(payload: Tuple[List[Scenario], float]) -> List[Tuple[SimResult, LatencyStats]]:
-    """Worker: run one shard of members as a lockstep fleet (the cluster
+    """Worker: run one shard of members as a lockstep pool (the cluster
     drive mode: start all, advance all on a stride grid, finalize all).
     Members whose scenario requests a reference comparison get a paired
-    uncapped reference simulation in the same lockstep pass."""
+    uncapped reference simulation in the same lockstep pass. Members whose
+    scenario carries a RoutingSpec run as whole routed fleets
+    (:class:`~repro.fleet.fleet.FleetSimulator`) — multi-row ensemble members
+    lockstep next to single-row ones through the same drive protocol."""
     scenarios, stride = payload
-    sims: List[RowSimulator] = []
-    refs: List[Optional[RowSimulator]] = []
+    sims: List[object] = []
+    refs: List[Optional[object]] = []
     traces = []
     for sc in scenarios:
         wls, shares = _cached_workloads(sc)
         server = sc.fleet.server()
         n = sc.fleet.n_servers
+        budget = _member_budget_w(sc)
+        if sc.routing is not None:
+            from repro.fleet.fleet import build_fleet, fleet_trace
+            reqs = fleet_trace(sc, wls, shares)
+            traces.append(reqs)
+            sims.append(build_fleet(sc, wls, shares, server, budget,
+                                    sc.policy.build, reqs))
+            refs.append(build_fleet(sc, wls, shares, server, budget,
+                                    sc.policy.build, reqs, reference=True)
+                        if sc.compare_to_reference else None)
+            continue
         reqs = row_trace(sc, wls, shares, n, seed=sc.seed)
         traces.append(reqs)
-        if sc.budget == "nominal":
-            budget = None  # RowSimulator default: n_provisioned x rating
-        elif isinstance(sc.budget, (int, float)):
-            budget = float(sc.budget)
-        else:
-            raise ValueError(
-                f"member {sc.name!r} reached the batch runner with budget="
-                f"{sc.budget!r}; resolve it to watts first (run_ensemble "
-                "pins the base scenario's resolved budget across members)")
         sims.append(row_sim(sc, wls, shares, server, budget,
                             sc.policy.build(), reqs))
         if sc.compare_to_reference:
@@ -230,26 +265,27 @@ def _run_shard(payload: Tuple[List[Scenario], float]) -> List[Tuple[SimResult, L
                                      duration=sc.duration_s))
         else:
             refs.append(None)
-    fleet = sims + [r for r in refs if r is not None]
-    for s in fleet:
+    pool = sims + [r for r in refs if r is not None]
+    for s in pool:
         s.start()
-    duration = max((s.duration for s in fleet), default=0.0)
-    alive = [True] * len(fleet)
+    duration = max((s.duration for s in pool), default=0.0)
+    alive = [True] * len(pool)
     t = stride
     while t <= duration and any(alive):
-        for i, s in enumerate(fleet):
+        for i, s in enumerate(pool):
             if alive[i]:
                 alive[i] = s.advance_to(min(t, s.duration))
         t += stride
-    for s in fleet:
+    for s in pool:
         s.advance_to(s.duration)
     out = []
     for sim, ref, reqs in zip(sims, refs, traces):
-        res = sim.finalize()
+        res = _finalize_member(sim)
         if ref is None:
             stats = res.latency
         else:
-            stats = impact_vs_reference(res.latencies, ref.finalize().latencies,
+            stats = impact_vs_reference(res.latencies,
+                                        _finalize_member(ref).latencies,
                                         {r.rid: r.priority for r in reqs})
         out.append((res, stats))
     return out

@@ -43,9 +43,16 @@ _EPS = 1e-12
 
 @dataclass(frozen=True)
 class RiskConstraints:
-    """What the planner is allowed to risk across traffic realizations."""
+    """What the planner is allowed to risk across traffic realizations.
 
-    max_brake_prob: float = 0.0  # P[member sees a powerbrake]
+    ``max_brakes`` is a per-horizon brake-count budget: a realization is
+    brake-feasible while its powerbrake count stays <= ``max_brakes`` (0
+    keeps the paper's zero-tolerance), and ``max_brake_prob`` bounds the
+    probability of exceeding that budget. Loosening either admits larger
+    fleets (planner-monotonicity is tier-1-asserted)."""
+
+    max_brake_prob: float = 0.0  # P[member exceeds the brake budget]
+    max_brakes: int = 0  # brakes tolerated per realization/horizon
     max_slo_violation_prob: float = 0.0  # P[member misses the SLO]
     slo: SLO = DEFAULT_SLO
 
@@ -123,7 +130,7 @@ def plan_capacity(base: Scenario, *,
                                         n_workers=n_workers,
                                         with_reference=True),
                            budget_w=budget)
-        brake_p = ens.brake_prob()
+        brake_p = ens.brake_prob(constraints.max_brakes)
         slo_p = _violation_prob(ens, constraints.slo)
         pt = PlanPoint(
             added_servers=k, added_frac=k / n_prov,

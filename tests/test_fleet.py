@@ -1,0 +1,286 @@
+"""Fleet serving layer: routing determinism, single-row bit-parity with the
+standalone RowSimulator, admission-control conservation, router behavior,
+and Monte-Carlo fleet-member parity."""
+
+import numpy as np
+import pytest
+
+from repro.experiments import (
+    FleetSpec,
+    PolicySpec,
+    RoutingSpec,
+    Scenario,
+    TrafficSpec,
+    get_scenario,
+    run_experiment,
+)
+from repro.fleet import (
+    CapAwareRouter,
+    FleetView,
+    JoinShortestQueueRouter,
+    RoundRobinRouter,
+    RowView,
+    ShedLowPriority,
+    attribute_routing,
+    build_admission,
+    build_router,
+)
+from repro.fleet.fleet import fleet_trace
+from repro.provisioning import (
+    EnsembleSpec,
+    RiskConstraints,
+    plan_capacity,
+    run_ensemble,
+)
+
+
+def _fleet_scenario(**kw) -> Scenario:
+    base = dict(
+        name="fleet-test",
+        duration_s=1800.0,
+        fleet=FleetSpec(n_provisioned=16, added_frac=0.25, n_rows=3,
+                        rows_per_rack=2,
+                        row_budget_fracs=(1.0, 1.0, 0.7)),
+        policy=PolicySpec("polca"),
+        traffic=TrafficSpec(occ_peak=0.9),
+        routing=RoutingSpec("cap-aware"),
+        budget="nominal",
+        compare_to_reference=False,
+    )
+    base.update(kw)
+    return Scenario(**base)
+
+
+# ---------------------------------------------------------------- routers
+def _view(i, **kw):
+    base = dict(index=i, power_frac=0.5, headroom_w=100.0, braked=False,
+                t1_capped=False, t2_capped=False, hp_capped=False,
+                pool_size=4, pool_idle=2, pool_queued=0)
+    base.update(kw)
+    return RowView(**base)
+
+
+def _req(priority="high"):
+    from repro.core.simulator import Request
+    return Request(t_arrival=0.0, wl=0, prompt=128, out_tokens=128,
+                   priority=priority, rid=0)
+
+
+def test_round_robin_cycles():
+    r = RoundRobinRouter()
+    views = [_view(i) for i in range(3)]
+    picks = [r.route(_req(), views)[0] for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+
+
+def test_jsq_picks_least_pending():
+    r = JoinShortestQueueRouter()
+    views = [_view(0, pool_idle=0, pool_queued=3),
+             _view(1, pool_idle=1, pool_queued=0),
+             _view(2, pool_idle=0, pool_queued=1)]
+    assert r.route(_req(), views)[0] == 1
+
+
+def test_cap_aware_avoids_braked_rows():
+    r = CapAwareRouter()
+    views = [_view(0, braked=True, pool_idle=4),
+             _view(1, pool_idle=0, pool_queued=2)]
+    row, reason = r.route(_req("high"), views)
+    assert row == 1, "a queued healthy row beats an idle braked row"
+    assert reason == "cap-aware/uncapped"
+    # ...unless every row is braked: then least-loaded braked row wins
+    views = [_view(0, braked=True, pool_idle=4),
+             _view(1, braked=True, pool_idle=0, pool_queued=2)]
+    row, reason = r.route(_req("high"), views)
+    assert row == 0 and reason == "cap-aware/braked"
+
+
+def test_cap_aware_steers_hp_from_capped_rows_on_ties():
+    r = CapAwareRouter()
+    views = [_view(0, t2_capped=True, hp_capped=True),
+             _view(1)]
+    assert r.route(_req("high"), views)[0] == 1
+    # LP is not slowed by the HP cap tier; mild T2 penalty still tips ties
+    views = [_view(0, t1_capped=True), _view(1)]
+    assert r.route(_req("low"), views)[0] == 1
+
+
+def test_admission_sheds_lp_only_during_emergency():
+    adm = ShedLowPriority(shed_above=0.97)
+    calm = FleetView(t=0.0, cluster_frac=0.5, n_braked=0)
+    hot = FleetView(t=0.0, cluster_frac=0.99, n_braked=0)
+    braked = FleetView(t=0.0, cluster_frac=0.5, n_braked=1)
+    assert adm.admit(_req("low"), calm)
+    assert not adm.admit(_req("low"), hot)
+    assert not adm.admit(_req("low"), braked)
+    for fv in (calm, hot, braked):
+        assert adm.admit(_req("high"), fv), "HP is never shed"
+
+
+def test_router_registry_round_trip():
+    for kind in ("round-robin", "jsq", "power-headroom", "cap-aware"):
+        assert build_router(kind) is not build_router(kind)
+    with pytest.raises(KeyError):
+        build_router("nope")
+    with pytest.raises(KeyError):
+        build_admission("nope")
+
+
+# ------------------------------------------------------------- scenarios
+def test_fleet_scenarios_registered_and_serializable():
+    for name in ("fleet-round-robin", "fleet-jsq", "fleet-power-headroom",
+                 "fleet-cap-aware", "fleet-rr-shed"):
+        sc = get_scenario(name)
+        assert sc.routing is not None
+        assert Scenario.from_json(sc.to_json()) == sc
+
+
+# ------------------------------------------------------------ simulation
+def test_fleet_seeded_determinism():
+    sc = _fleet_scenario()
+    a = run_experiment(sc)
+    b = run_experiment(sc)
+    c = run_experiment(sc.with_(seed=sc.seed + 1))
+    assert a.result.latencies == b.result.latencies
+    assert np.array_equal(a.fleet.cluster_power_frac, b.fleet.cluster_power_frac)
+    assert [d for d in a.fleet.decisions] == [d for d in b.fleet.decisions]
+    assert a.result.latencies != c.result.latencies, "seed must matter"
+
+
+def test_fleet_duration_not_multiple_of_telemetry():
+    """A duration off the telemetry grid must run clean end to end (the
+    final partial window used to crash inject() on drained rows)."""
+    sc = _fleet_scenario(duration_s=1801.7)
+    o = run_experiment(sc)
+    f = o.fleet
+    assert f.n_admitted + f.n_shed_total == f.n_offered
+    assert all(d.t <= 1801.7 for d in f.decisions)
+
+
+def test_inject_revives_drained_row():
+    """inject() into a row whose event queue overshot its duration (possible
+    in the final partial telemetry window) revives it instead of raising or
+    silently dropping the arrival."""
+    from repro.core.policy import NoCap
+    from repro.core.simulator import Request, RowSimulator, SimConfig
+    from repro.experiments.runner import build_workloads
+    sc = _fleet_scenario()
+    wls, shares = build_workloads(sc)
+    row = RowSimulator(wls, sc.fleet.server(), 4, 4, NoCap(), [], shares,
+                       SimConfig(record_power=False), duration=3.0)
+    row.start()
+    assert row.advance_to(3.0) is False  # telemetry@4s overshot: drained
+    row.inject(Request(2.5, 0, 1024, 8, "high", 0))
+    row.advance_to(3.0)
+    assert any(s.state != "idle" for s in row.servers), \
+        "the late arrival must enter service"
+    row.finalize()
+    with pytest.raises(ValueError):
+        row.inject(Request(3.5, 0, 1024, 8, "high", 1))  # beyond duration
+
+
+def test_single_row_fleet_bit_identical_to_standalone():
+    """Acceptance: a one-row round-robin fleet reproduces the standalone
+    RowSimulator path bit-for-bit (trace, events, telemetry, stats)."""
+    base = get_scenario("fig14-plus30").with_(duration_s=3600.0)
+    solo = run_experiment(base)
+    fleet = run_experiment(base.with_(routing=RoutingSpec("round-robin")))
+    fr, sr = fleet.fleet.row_results[0], solo.result
+    assert fr.latencies == sr.latencies
+    assert fr.queue_delays == sr.queue_delays
+    assert np.array_equal(fr.power_w, sr.power_w)
+    assert (fr.n_brakes, fr.cap_events, fr.n_completed, fr.n_dropped) \
+        == (sr.n_brakes, sr.cap_events, sr.n_completed, sr.n_dropped)
+    assert fr.peak_power_frac == sr.peak_power_frac
+    assert fr.mean_power_frac == sr.mean_power_frac
+    # reference-relative stats (both paths pair an uncapped twin) match too
+    assert fleet.stats.summary() == solo.stats.summary()
+    assert fleet.meets == solo.meets
+
+
+def test_admission_conservation():
+    """Acceptance: admitted + shed == offered, and shedding is LP-only."""
+    sc = _fleet_scenario(routing=RoutingSpec(
+        "cap-aware", admission="shed-lp",
+        admission_params={"shed_above": 0.5}))  # shed aggressively
+    o = run_experiment(sc)
+    fres = o.fleet
+    from repro.experiments.runner import build_workloads
+    wls, shares = build_workloads(sc)
+    assert fres.n_offered == len(fleet_trace(sc, wls, shares))
+    assert fres.n_admitted + fres.n_shed_total == fres.n_offered
+    assert fres.n_shed.get("high", 0) == 0
+    assert fres.n_shed.get("low", 0) > 0, "aggressive threshold must shed"
+    shed_decisions = [d for d in fres.decisions if d.row < 0]
+    assert len(shed_decisions) == fres.n_shed_total
+    assert all(d.priority == "low" for d in shed_decisions)
+    # shed requests never reach a row
+    served = set(fres.merged_latencies())
+    assert served.isdisjoint({d.rid for d in shed_decisions})
+    # decision log covers every offered request exactly once
+    assert len(fres.decisions) == fres.n_offered
+    assert len({d.rid for d in fres.decisions}) == fres.n_offered
+
+
+def test_routing_attribution_joins_decisions_with_outcomes():
+    sc = _fleet_scenario()
+    o = run_experiment(sc)
+    from repro.experiments.runner import build_workloads
+    wls, shares = build_workloads(sc)
+    reqs = fleet_trace(sc, wls, shares)
+    att = attribute_routing(o.fleet, reqs, wls)
+    assert att.n_offered == len(reqs)
+    assert set(att.per_row) <= set(range(sc.fleet.n_rows))
+    n_routed = sum(g.n_routed for g in att.per_row.values())
+    assert n_routed == att.n_admitted
+    n_completed = sum(g.n_completed for g in att.per_row.values())
+    assert n_completed == sum(rr.n_completed for rr in o.fleet.row_results)
+    assert att.summary()["n_offered"] == float(len(reqs))
+
+
+def test_heterogeneous_budgets_applied_per_row():
+    sc = _fleet_scenario()
+    o = run_experiment(sc)
+    # the derated row's budget is 70% of the others': identical traffic
+    # pressure must push it to a higher fraction of its own budget
+    fracs = o.fleet.row_power_frac
+    assert fracs.shape[1] == 3
+    assert float(fracs[:, 2].mean()) > float(fracs[:, 0].mean())
+
+
+# ------------------------------------------------------- ensembles/planner
+def test_fleet_ensemble_bit_parity_with_sequential_run_experiment():
+    """Acceptance (ROADMAP open item): multi-row fleet members run in the
+    batched Monte-Carlo engine bit-identically to a sequential loop."""
+    base = _fleet_scenario(duration_s=1200.0)
+    spec = EnsembleSpec(base, n_seeds=3, seed0=500, n_workers=2)
+    ens = run_ensemble(spec)
+    assert ens.power_frac.shape[0] == 3
+    for m, sc in zip(ens.members, spec.member_scenarios(ens.budget_w)):
+        o = run_experiment(sc)
+        assert m.result.latencies == o.result.latencies
+        assert np.array_equal(m.result.power_w, o.result.power_w)
+        assert m.result.n_brakes == o.result.n_brakes
+
+
+def test_fleet_ensemble_reference_mode_matches_run_experiment():
+    base = _fleet_scenario(duration_s=1200.0)
+    spec = EnsembleSpec(base, n_seeds=2, seed0=500, n_workers=1,
+                        with_reference=True)
+    ens = run_ensemble(spec)
+    for m, sc in zip(ens.members, spec.member_scenarios(ens.budget_w)):
+        o = run_experiment(sc)
+        assert m.stats.summary() == o.stats.summary()
+        assert m.meets == o.meets
+
+
+def test_planner_over_fleet_members():
+    """plan_capacity accepts a routed-fleet base scenario (multi-row
+    ensemble members, the ROADMAP open item)."""
+    base = _fleet_scenario(duration_s=900.0).with_fleet(added_frac=0.0)
+    plan = plan_capacity(
+        base, constraints=RiskConstraints(max_brake_prob=1.0,
+                                          max_slo_violation_prob=1.0),
+        n_seeds=2, seed0=650, max_added_frac=0.25, n_workers=2)
+    assert plan.capped and plan.safe_added_servers == 4
+    assert all(p.ensemble is None for p in plan.probes)

@@ -192,6 +192,35 @@ def test_planner_monotonic_in_risk_constraints():
     assert tight.budget_w == pytest.approx(loose.budget_w)
 
 
+def test_planner_monotonic_in_brake_budget():
+    """Loosening the per-horizon brake-count budget (max_brakes) admits
+    fleets at least as large, and a brake budget sits between zero-tolerance
+    and unconstrained (ROADMAP open item: brake budgets, not just zero)."""
+    # a budget tight enough that brake counts grow with the fleet (nominal
+    # would never brake inside the search range)
+    budget = 0.88 * 20 * SMALL.fleet.server().provisioned_w
+    base = SMALL.with_fleet(added_frac=0.0).with_(budget=budget)
+    slo_off = SLO(hp_p50=10.0, hp_p99=10.0, lp_p50=10.0, lp_p99=10.0,
+                  max_powerbrakes=10**9)
+    kw = dict(n_seeds=2, seed0=810, max_added_frac=0.5, n_workers=2,
+              budget_w=budget)
+    plans = [plan_capacity(base, constraints=RiskConstraints(
+                 max_brakes=mb, slo=slo_off,
+                 max_slo_violation_prob=1.0), **kw)
+             for mb in (0, 20, 10**6)]
+    sizes = [p.safe_added_servers for p in plans]
+    assert sizes == sorted(sizes), f"brake budget must be monotone: {sizes}"
+    assert plans[-1].capped and sizes[-1] == 10
+    assert sizes[0] < sizes[-1], "zero-tolerance must bind on this envelope"
+    assert all(p.probes for p in plans), "planner must record its probes"
+    assert plans[1].budget_w == pytest.approx(plans[0].budget_w)
+    # the underlying exceedance is monotone in the brake budget too
+    ens = run_ensemble(EnsembleSpec(SMALL, n_seeds=3, seed0=810, n_workers=1))
+    probs = [ens.brake_prob(k) for k in (0, 1, 5, 10**6)]
+    assert probs == sorted(probs, reverse=True)
+    assert probs[-1] == 0.0
+
+
 def test_planner_reports_infeasible_at_zero():
     # a budget so tight even the provisioned fleet brakes
     base = SMALL.with_fleet(added_frac=0.0).with_(budget=1000.0)

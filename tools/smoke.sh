@@ -17,4 +17,7 @@ python -m benchmarks.run --quick --only table2
 echo "== capacity-planning quick benchmark =="
 python -m benchmarks.run --quick --only capacity
 
+echo "== fleet-routing quick benchmark =="
+python -m benchmarks.run --quick --only fleet_routing
+
 echo "smoke OK"

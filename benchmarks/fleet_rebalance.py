@@ -1,0 +1,138 @@
+"""Dynamic fleet power-rebalancing: controller-policy sweep on the
+derated-row cluster (DESIGN.md §11).
+
+Validates the fleet controller's three claims:
+  * at the stressed load point where static per-row budgets powerbrake the
+    derated row and blow the Table-5 HP SLO even under cap-aware routing,
+    predictive rebalancing (budget follows the 40 s OOB-horizon forecast)
+    meets the HP SLOs with zero powerbrakes — the headline: the
+    oversubscription headroom was there all along, stranded on the derated
+    row's rack partner;
+  * a static-ControllerSpec fleet is bit-identical to a controller-less
+    (PR 3) fleet — the controller is a safe default-off feature;
+  * rebalancing removes brake risk across seeded traffic realizations
+    (Monte-Carlo ensemble), and — in full mode — ``plan_capacity`` over
+    controller-bearing fleets quantifies the safe oversubscription bought
+    back versus static budgets.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, module_main, seeded
+from repro.experiments import get_scenario, run_experiment
+from repro.experiments.runner import build_workloads, resolve_budget
+from repro.provisioning import (
+    RiskConstraints,
+    plan_controller_comparison,
+    run_ensemble_grid,
+)
+
+HP_P50_SLO = 0.01  # Table 5
+HP_P99_SLO = 0.05
+
+
+def run(quick: bool = False) -> Bench:
+    b = Bench()
+    dur = 3 * 3600.0 if quick else None  # registered: 6 h
+    base = seeded(get_scenario("fleet-rebalance-static"))
+    if dur is not None:
+        base = base.with_(duration_s=dur)
+    wls, shares = build_workloads(base)
+    budget = resolve_budget(base, wls, shares, base.fleet.server())
+    base = base.with_(budget=budget)  # calibrate once, share across variants
+
+    variants = ["static", "proportional", "predictive", "forecast-router"]
+    summaries = {}
+    for kind in variants:
+        sc = seeded(get_scenario(f"fleet-rebalance-{kind}")).with_(
+            duration_s=base.duration_s, budget=budget)
+        t0 = time.perf_counter()
+        o = run_experiment(sc)
+        us = (time.perf_counter() - t0) * 1e6
+        s = o.stats.summary()
+        summaries[kind] = (s, o)
+        f = o.fleet
+        b.add(f"rebalance/{kind}",
+              f"hp_p99={s['hp_p99']:.1%} lp_p99={s['lp_p99']:.1%} "
+              f"brakes={o.result.n_brakes} rebalances={f.n_rebalances} "
+              f"moved={f.budget_moved_w() / 1e3:.0f}kW", us, None)
+
+    # ---- headline: predictive rebalancing recovers the HP SLO gap ----------
+    st, st_o = summaries["static"]
+    pr, pr_o = summaries["predictive"]
+    static_violates = (st["hp_p99"] >= HP_P99_SLO or st_o.result.n_brakes > 0)
+    predictive_meets = (pr["hp_p50"] < HP_P50_SLO and pr["hp_p99"] < HP_P99_SLO
+                        and pr_o.result.n_brakes == 0)
+    b.add("rebalance/predictive_recovers_hp_slo",
+          f"static hp_p99={st['hp_p99']:.1%} brakes={st_o.result.n_brakes} "
+          f"({'violated' if static_violates else 'met'}); predictive "
+          f"hp_p99={pr['hp_p99']:.2%} brakes={pr_o.result.n_brakes} "
+          f"({'met' if predictive_meets else 'violated'})",
+          0.0, static_violates and predictive_meets)
+
+    # the derated row's budget actually grew (slack moved toward demand)
+    fb = pr_o.fleet.row_budget_w
+    derated = int(np.argmin(fb[0]))
+    uplift = float(fb[:, derated].max() / fb[0, derated] - 1.0)
+    b.add("rebalance/derated_row_uplift",
+          f"row {derated} budget peak uplift {uplift:.1%} "
+          f"(from {fb[0, derated] / 1e3:.1f}kW)", 0.0, uplift > 0.0)
+
+    # ---- static ControllerSpec == controller-less fleet, bit for bit -------
+    par_sc = base.with_(duration_s=min(base.duration_s, 1800.0),
+                        compare_to_reference=False)
+    with_ctl = run_experiment(par_sc)
+    without = run_experiment(par_sc.with_(controller=None))
+    fa, fo = with_ctl.fleet, without.fleet
+    bit = (with_ctl.result.latencies == without.result.latencies
+           and np.array_equal(fa.cluster_power_frac, fo.cluster_power_frac)
+           and np.array_equal(fa.row_power_frac, fo.row_power_frac)
+           and fa.decisions == fo.decisions
+           and fa.n_rebalances == 0)
+    b.add("rebalance/static_bit_parity",
+          f"static-controller fleet == PR3 controller-less fleet: {bit}",
+          0.0, bit)
+
+    # ---- ensemble: rebalancing removes brake risk across realizations ------
+    n_seeds = 2 if quick else 4
+    ens_dur = 1800.0 if quick else 3600.0
+    bases = [base.with_(duration_s=ens_dur, compare_to_reference=False),
+             seeded(get_scenario("fleet-rebalance-predictive")).with_(
+                 duration_s=ens_dur, budget=budget,
+                 compare_to_reference=False)]
+    t0 = time.perf_counter()
+    grid = run_ensemble_grid(bases, n_seeds=n_seeds, seed0=1000,
+                             budget_w=budget)
+    us = (time.perf_counter() - t0) * 1e6
+    bp_static = grid[bases[0].name].brake_prob()
+    bp_pred = grid[bases[1].name].brake_prob()
+    b.add("rebalance/ensemble_brake_risk",
+          f"P[>=1 brake] over {n_seeds} seeds: static={bp_static:.2f} "
+          f"predictive={bp_pred:.2f}", us, bp_pred < bp_static)
+
+    # ---- full mode: how much oversubscription rebalancing buys back --------
+    if not quick:
+        plan_base = base.with_(duration_s=3600.0)
+        t0 = time.perf_counter()
+        plans = plan_controller_comparison(
+            plan_base, ("static", "predictive"),
+            constraints=RiskConstraints(),
+            n_seeds=2, seed0=1000, max_added_frac=0.30, budget_w=budget)
+        us = (time.perf_counter() - t0) * 1e6
+        st_plan, pr_plan = plans["static"], plans["predictive"]
+        b.add("rebalance/planner_buyback",
+              f"safe added servers under the same envelope: "
+              f"static={st_plan.safe_added_servers} "
+              f"({st_plan.safe_added_frac:.1%}) "
+              f"predictive={pr_plan.safe_added_servers} "
+              f"({pr_plan.safe_added_frac:.1%})", us,
+              pr_plan.safe_added_servers >= st_plan.safe_added_servers)
+    return b
+
+
+if __name__ == "__main__":
+    module_main(run)

@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.fig19_beyond_llm",
     "benchmarks.capacity_planning",
     "benchmarks.fleet_routing",
+    "benchmarks.fleet_rebalance",
     "benchmarks.phase_aware_savings",
     "benchmarks.kernel_micro",
     "benchmarks.roofline_table",

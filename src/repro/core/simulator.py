@@ -167,6 +167,15 @@ class RowSimulator:
         self._t = 0.0
         self._started = False
         self._past_end = False
+        # budget-era accounting, only engaged once set_budget() is called
+        # (the fleet rebalancing controller): peak/mean power *fractions*
+        # must be measured against the budget in force when the power was
+        # drawn, not the final budget
+        self._budget_moved = False
+        self._era_peak = 0.0
+        self._era_integral0 = 0.0
+        self._frac_peak = 0.0
+        self._frac_integral = 0.0
 
     # ------------------------------------------------------------------
     def _push(self, t, kind, args=()):
@@ -195,10 +204,33 @@ class RowSimulator:
             s.power_state = s.state
             s.power_w = new_p
             self._peak = max(self._peak, self.row_power)
+            if self._budget_moved:
+                self._era_peak = max(self._era_peak, self.row_power)
 
     def _account_power(self, t: float):
         self._power_integral += self.row_power * (t - self._last_power_t)
         self._last_power_t = t
+
+    def set_budget(self, budget_w: float, t: float):
+        """Change the row power budget at time ``t`` (the fleet rebalancing
+        controller's actuation point). Closes the current budget *era* so
+        ``peak_power_frac``/``mean_power_frac`` stay measured against the
+        budget in force when the power was drawn: the watts-integral and
+        running peak accumulated so far are folded into fraction space at
+        the old budget before the new one takes effect. Rows that never see
+        a ``set_budget`` call keep the original (bit-identical) single-era
+        accounting."""
+        self._account_power(t)  # fold the open watts segment at the old budget
+        if not self._budget_moved:
+            self._budget_moved = True
+            self._era_peak = self._peak
+        self._frac_peak = max(self._frac_peak,
+                              self._era_peak / self.provisioned_w)
+        self._frac_integral += ((self._power_integral - self._era_integral0)
+                                / self.provisioned_w)
+        self._era_integral0 = self._power_integral
+        self._era_peak = self.row_power  # the standing draw opens the new era
+        self.provisioned_w = float(budget_w)
 
     # ------------------------------------------------------------------
     def _start_next(self, s: _Server, t: float):
@@ -295,9 +327,17 @@ class RowSimulator:
         t = self._t
         self._account_power(t if t <= self.duration else self.duration)
         res.n_brakes = self.policy.n_brakes
-        res.peak_power_frac = self._peak / self.provisioned_w
         dur = max(1e-9, self._last_power_t)
-        res.mean_power_frac = self._power_integral / dur / self.provisioned_w
+        if self._budget_moved:
+            # per-era fractions: each watt-second against its era's budget
+            res.peak_power_frac = max(self._frac_peak,
+                                      self._era_peak / self.provisioned_w)
+            res.mean_power_frac = (self._frac_integral
+                                   + (self._power_integral - self._era_integral0)
+                                   / self.provisioned_w) / dur
+        else:
+            res.peak_power_frac = self._peak / self.provisioned_w
+            res.mean_power_frac = self._power_integral / dur / self.provisioned_w
         if self.cfg.record_power:
             res.power_t = np.asarray(self._power_samples_t)
             res.power_w = np.asarray(self._power_samples_w)

@@ -23,6 +23,7 @@ from repro.experiments.runner import (
 from repro.experiments.scenario import (
     DAY,
     WEEK,
+    ControllerSpec,
     FleetSpec,
     PolicySpec,
     RoutingSpec,
@@ -38,6 +39,7 @@ __all__ = [
     "BASELINE_PEAK_UTIL",
     "ClusterResult",
     "ClusterSimulator",
+    "ControllerSpec",
     "DAY",
     "ExperimentResult",
     "FleetSpec",

@@ -109,6 +109,31 @@ class RoutingSpec:
 
 
 @dataclass(frozen=True)
+class ControllerSpec:
+    """Fleet-level power-rebalancing configuration. ``kind`` names a
+    rebalance policy in the ``repro.fleet.controller`` registry (``static``
+    — budgets never move, bit-identical to controller-less fleets;
+    ``proportional`` — envelope split by measured row power; ``predictive``
+    — split by the 40 s OOB-horizon power forecast); ``params`` pass to the
+    policy builder verbatim. The controller re-divides the fixed ``scope``
+    envelope ("rack" or "cluster") every ``interval_s``, stepping
+    ``alpha`` of the way to the target and never dropping a row below
+    ``min_share`` of its group's equal split. A Scenario carrying a
+    ControllerSpec (and a RoutingSpec — the controller rides the fleet
+    driver's telemetry lockstep) gets a
+    :class:`~repro.fleet.controller.FleetController`. Rebalances that would
+    move fewer than ``deadband_w`` watts in total are skipped."""
+
+    kind: str = "static"
+    params: Dict[str, Any] = field(default_factory=dict)
+    interval_s: float = 60.0
+    scope: str = "rack"
+    alpha: float = 0.5
+    min_share: float = 0.5
+    deadband_w: float = 1.0
+
+
+@dataclass(frozen=True)
 class TelemetryConfig:
     """Controller-plane constants (paper Table 1)."""
 
@@ -138,6 +163,9 @@ class Scenario:
     # fleet serving: a cluster-wide arrival process dispatched by a router
     # (repro.fleet) instead of pre-baked per-row traces
     routing: Optional[RoutingSpec] = None
+    # fleet-level dynamic power rebalancing (requires routing; None = static
+    # per-row budgets, exactly the pre-controller behavior)
+    controller: Optional[ControllerSpec] = None
 
     def with_(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
@@ -154,6 +182,18 @@ class Scenario:
         prev = self.routing or RoutingSpec()
         return self.with_(routing=dataclasses.replace(
             prev, router=router, params=params))
+
+    def with_controller(self, kind: str, **kw) -> "Scenario":
+        """Same scenario under a different rebalance policy. Keyword args
+        matching ControllerSpec fields (``interval_s``, ``scope``,
+        ``alpha``, ``min_share``) configure the controller; the rest pass to
+        the policy builder as ``params``."""
+        fields = {f.name for f in dataclasses.fields(ControllerSpec)} - {"kind", "params"}
+        spec_kw = {k: v for k, v in kw.items() if k in fields}
+        params = {k: v for k, v in kw.items() if k not in fields}
+        prev = self.controller or ControllerSpec()
+        return self.with_(controller=dataclasses.replace(
+            prev, kind=kind, params=params, **spec_kw))
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
@@ -172,6 +212,8 @@ class Scenario:
         d["slo"] = SLO(**d.get("slo", {}))
         if d.get("routing") is not None:
             d["routing"] = RoutingSpec(**d["routing"])
+        if d.get("controller") is not None:
+            d["controller"] = ControllerSpec(**d["controller"])
         return cls(**d)
 
     def to_json(self) -> str:
@@ -296,3 +338,28 @@ register_scenario(_FLEET_BASE.with_(
     name="fleet-rr-shed",
     routing=RoutingSpec("round-robin", admission="shed-lp",
                         admission_params={"shed_above": 0.97})))
+
+# Fleet rebalancing scenarios (repro.fleet.controller): the derated-row
+# cluster pushed past the point where routing alone saves it — traffic high
+# enough that even cap-aware dispatch powerbrakes the 0.7x row under static
+# per-row budgets, while its rack partner holds slack it never spends. The
+# variants differ ONLY in the ControllerSpec (same trace, envelope, router),
+# so they measure exactly what dynamic rebalancing buys: `static` reproduces
+# pre-controller behavior bit-for-bit, `proportional` follows measured
+# demand, `predictive` follows the 40s OOB-horizon forecast, and the
+# forecast-router variant pairs the predictive controller with the
+# forecast-aware router (budget moves toward predicted demand while marginal
+# load steers away from predicted congestion).
+_REBALANCE_BASE = _FLEET_BASE.with_routing("cap-aware").with_(
+    name="fleet-rebalance-static",
+    traffic=TrafficSpec(occ_peak=0.70, gen_params={"trough": 0.62}),
+    controller=ControllerSpec("static"),
+)
+register_scenario(_REBALANCE_BASE)
+register_scenario(_REBALANCE_BASE.with_controller("proportional")
+                  .with_(name="fleet-rebalance-proportional"))
+register_scenario(_REBALANCE_BASE.with_controller("predictive")
+                  .with_(name="fleet-rebalance-predictive"))
+register_scenario(_REBALANCE_BASE.with_controller("predictive")
+                  .with_routing("forecast-aware")
+                  .with_(name="fleet-rebalance-forecast-router"))

@@ -1,14 +1,29 @@
-"""Fleet serving layer: power-aware request routing and admission control
-over oversubscribed clusters (DESIGN.md §10).
+"""Fleet serving layer: power-aware request routing, admission control, and
+dynamic power rebalancing over oversubscribed clusters (DESIGN.md §10–§11).
 
 ``FleetSimulator`` drives M rows from one cluster-wide arrival process;
 ``router`` provides pluggable routing policies (round-robin, join-shortest-
-queue, power-headroom, cap-state-aware) plus priority-aware admission
-control; ``metrics`` attributes SLO impact and queueing delay per routing
-decision. Scenarios opt in declaratively via
-:class:`~repro.experiments.scenario.RoutingSpec`.
+queue, power-headroom, cap-state-aware, forecast-aware) plus priority-aware
+admission control; ``controller`` re-balances per-row power budgets under
+the fixed rack/cluster envelope (static / proportional / predictive);
+``metrics`` attributes SLO impact and queueing delay per routing decision.
+Scenarios opt in declaratively via
+:class:`~repro.experiments.scenario.RoutingSpec` and
+:class:`~repro.experiments.scenario.ControllerSpec`.
 """
 
+from repro.fleet.controller import (
+    REBALANCE_BUILDERS,
+    FleetController,
+    PowerForecaster,
+    ProportionalDemandPolicy,
+    PredictiveRebalancePolicy,
+    RebalanceEvent,
+    RebalancePolicy,
+    StaticBudgetPolicy,
+    build_controller,
+    build_rebalance_policy,
+)
 from repro.fleet.fleet import (
     FleetResult,
     FleetSimulator,
@@ -30,6 +45,7 @@ from repro.fleet.router import (
     AdmitAll,
     CapAwareRouter,
     FleetView,
+    ForecastAwareRouter,
     JoinShortestQueueRouter,
     PowerHeadroomRouter,
     RoundRobinRouter,
@@ -42,26 +58,37 @@ from repro.fleet.router import (
 
 __all__ = [
     "ADMISSION_BUILDERS",
+    "REBALANCE_BUILDERS",
     "ROUTER_BUILDERS",
     "AdmissionController",
     "AdmitAll",
     "CapAwareRouter",
     "DecisionGroupStats",
+    "FleetController",
     "FleetResult",
     "FleetSimulator",
     "FleetView",
+    "ForecastAwareRouter",
     "JoinShortestQueueRouter",
+    "PowerForecaster",
     "PowerHeadroomRouter",
+    "PredictiveRebalancePolicy",
+    "ProportionalDemandPolicy",
+    "RebalanceEvent",
+    "RebalancePolicy",
     "RoundRobinRouter",
     "Router",
     "RoutingAttribution",
     "RoutingDecision",
     "RowView",
     "ShedLowPriority",
+    "StaticBudgetPolicy",
     "as_sim_result",
     "attribute_routing",
     "build_admission",
+    "build_controller",
     "build_fleet",
+    "build_rebalance_policy",
     "build_router",
     "fleet_trace",
     "row_budgets",

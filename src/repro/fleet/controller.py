@@ -1,0 +1,317 @@
+"""Dynamic fleet power-rebalancing: move budget slack to where load lands.
+
+Static per-row budgets strand headroom: in the derated-row ``fleet-*``
+scenarios one row runs against a 30%-smaller envelope while its neighbors
+hold slack they never use, so the derated row powerbrakes at load points the
+rack as a whole could absorb. :class:`FleetController` closes that gap — it
+runs on the same telemetry-grid lockstep as the rack managers and
+periodically re-divides the *fixed* rack (or cluster) power envelope across
+rows, so each row's budget tracks where demand actually is. Conservation is
+structural: every rebalance re-normalizes the new budgets to the scope
+envelope held by the shared :class:`~repro.experiments.cluster.RackHierarchy`
+and asserts the sums match (tier-1-asserted every rebalance tick).
+
+Rebalance policies are registered by name so
+:class:`~repro.experiments.scenario.ControllerSpec` stays JSON-serializable:
+
+  | policy       | target budgets                                          |
+  | static       | never moves a watt (bit-identical to controller-less    |
+  |              | fleets — asserted in tests and the benchmark)           |
+  | proportional | envelope split proportional to measured row power       |
+  | predictive   | envelope split proportional to *forecast* row power     |
+  |              | over the 40 s OOB horizon (the same slope extrapolation |
+  |              | ``PredictivePolcaPolicy`` caps on), so budget arrives   |
+  |              | before the demand does                                  |
+
+The forecast comes from a shared :class:`PowerForecaster` the fleet driver
+feeds once per telemetry tick; the forecast-aware router
+(:class:`~repro.fleet.router.ForecastAwareRouter`) consumes the same
+per-row forecasts, closing the loop from the other side: the controller
+moves budget toward predicted demand while the router steers marginal load
+away from rows predicted to cross their (possibly just-rebalanced) budget.
+
+Actuation semantics mirror the real control plane: new budgets take effect
+at the *next* row telemetry sample (the rebalance lands between grid ticks),
+and a row's POLCA policy sees the change only through its own
+``power_frac`` — no policy state is touched, so hysteresis and escalation
+counters survive rebalances unchanged.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+CONSERVATION_ATOL = 1e-6  # watts; rebalances re-normalize exactly
+
+
+@dataclass(frozen=True)
+class RebalanceEvent:
+    """One applied rebalance: when, and the per-row budgets before/after.
+    ``demand_w`` is the signal the policy split the envelope by (measured or
+    forecast row power). Carried in ``FleetResult.rebalances`` so budget
+    motion is auditable next to the power series."""
+
+    t: float
+    budgets_before_w: np.ndarray  # [R]
+    budgets_after_w: np.ndarray  # [R]
+    demand_w: np.ndarray  # [R]
+    policy: str
+
+    def moved_w(self) -> float:
+        """Total watts that changed hands (half the L1 budget delta)."""
+        return float(np.abs(self.budgets_after_w - self.budgets_before_w).sum() / 2.0)
+
+
+class PowerForecaster:
+    """Per-row power forecast over the OOB horizon, shared by the predictive
+    rebalance policy and the forecast-aware router.
+
+    Maintains a sliding window of telemetry-grid samples per row and
+    extrapolates each row's least-squares slope ``horizon_s`` ahead — the
+    same estimator :class:`~repro.core.policy.PredictivePolcaPolicy` uses for
+    predictive capping, vectorized over rows. Forecasts are clamped from
+    below at the current measurement (a falling trend never *frees* budget
+    early; rising trends claim it early), matching the policy's
+    cap-early-never-uncap-early asymmetry.
+    """
+
+    def __init__(self, n_rows: int, *, horizon_s: float = 40.0, window: int = 8):
+        self.horizon_s = float(horizon_s)
+        self.window = int(window)
+        self._t: List[float] = []
+        self._w: List[np.ndarray] = []  # each [R]
+        self._n_rows = n_rows
+
+    def observe(self, t: float, row_w: np.ndarray) -> None:
+        """Feed one telemetry-grid sample of per-row watts."""
+        self._t.append(float(t))
+        self._w.append(np.asarray(row_w, float).copy())
+        if len(self._t) > self.window:
+            del self._t[0]
+            del self._w[0]
+
+    def forecast_w(self) -> np.ndarray:
+        """Predicted per-row watts ``horizon_s`` after the latest sample,
+        ``max(current, extrapolated)`` per row. With < 3 samples the forecast
+        is the latest measurement (no trend yet)."""
+        if not self._w:
+            return np.zeros(self._n_rows)
+        cur = self._w[-1]
+        if len(self._t) < 3:
+            return cur.copy()
+        t = np.asarray(self._t)
+        w = np.stack(self._w)  # [S, R]
+        dt = t - t.mean()
+        den = float((dt * dt).sum())
+        if den <= 0.0:
+            return cur.copy()
+        slope = (dt[:, None] * (w - w.mean(axis=0))).sum(axis=0) / den  # [R]
+        return np.maximum(cur, cur + slope * self.horizon_s)
+
+
+class RebalancePolicy:
+    """Protocol: ``target_budgets(demand_w, budgets_w, envelope_w) ->
+    targets | None`` for one scope group (a rack, or the whole cluster).
+    ``None`` means "leave this group alone"; targets need not sum to the
+    envelope — the controller floors, smooths, and re-normalizes them.
+    ``needs_forecast`` declares whether ``demand_w`` should be the
+    forecaster's prediction instead of the measured row power."""
+
+    name: str = "rebalance"
+    needs_forecast: bool = False
+
+    def target_budgets(self, demand_w: np.ndarray, budgets_w: np.ndarray,
+                       envelope_w: float) -> Optional[np.ndarray]:
+        raise NotImplementedError
+
+
+@dataclass
+class StaticBudgetPolicy(RebalancePolicy):
+    """Today's behavior: budgets stay exactly where provisioning put them.
+    A static-controller fleet is bit-identical to a controller-less fleet
+    (asserted in tier-1 and the benchmark parity row) — this is the seam
+    that makes the controller a safe default-off feature."""
+
+    name: str = "static"
+
+    def target_budgets(self, demand_w, budgets_w, envelope_w):
+        return None
+
+
+@dataclass
+class ProportionalDemandPolicy(RebalancePolicy):
+    """Split the envelope proportional to measured row power. Reactive: it
+    moves budget *after* demand has landed, so a fast-rising row can still
+    spend the 40 s OOB window capped (or braked) before relief arrives —
+    the gap the predictive policy closes."""
+
+    name: str = "proportional"
+
+    def target_budgets(self, demand_w, budgets_w, envelope_w):
+        total = float(demand_w.sum())
+        if total <= 0.0:
+            return None
+        return envelope_w * demand_w / total
+
+
+@dataclass
+class PredictiveRebalancePolicy(RebalancePolicy):
+    """Split the envelope proportional to *forecast* row power over the OOB
+    horizon (``PowerForecaster``): budget moves toward where demand is
+    heading, so it lands before the row's POLCA policy would have had to
+    cap — the fleet-level twin of ``PredictivePolcaPolicy``'s predictive
+    capping."""
+
+    name: str = "predictive"
+    needs_forecast: bool = True
+
+    def target_budgets(self, demand_w, budgets_w, envelope_w):
+        total = float(demand_w.sum())
+        if total <= 0.0:
+            return None
+        return envelope_w * demand_w / total
+
+
+class FleetController:
+    """Periodically re-divide the rack/cluster envelope across row budgets.
+
+    Bound to a :class:`~repro.experiments.cluster.RackHierarchy` by the
+    fleet driver; every ``interval_s`` it asks the policy for target budgets
+    per scope group (``scope="rack"``: each rack's rows share that rack's
+    envelope; ``scope="cluster"``: all rows share the cluster envelope),
+    floors them at ``min_share`` of the group's equal split (a starved row
+    still draws idle power — a zero budget would powerbrake it instantly),
+    low-passes the step with ``alpha`` (full jumps oscillate against the
+    40 s actuation delay, the same failure mode strict cap-avoidance routing
+    has), re-normalizes exactly to the envelope, and applies the result to
+    ``RowSimulator.provisioned_w``. Conservation — group sums equal to the
+    fixed envelope — is asserted on every applied rebalance.
+    """
+
+    def __init__(self, policy: RebalancePolicy, *, interval_s: float = 60.0,
+                 scope: str = "rack", alpha: float = 0.5,
+                 min_share: float = 0.5, deadband_w: float = 1.0):
+        if scope not in ("rack", "cluster"):
+            raise ValueError(f"scope must be 'rack' or 'cluster', got {scope!r}")
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        if not 0.0 < min_share < 1.0:
+            # a zero floor lets a zero-demand row's budget reach 0 W, which
+            # divides its next telemetry sample by zero
+            raise ValueError(f"min_share must be in (0, 1), got {min_share}")
+        self.policy = policy
+        self.interval_s = float(interval_s)
+        self.scope = scope
+        self.alpha = float(alpha)
+        self.min_share = float(min_share)
+        self.deadband_w = float(deadband_w)
+        self.events: List[RebalanceEvent] = []
+        self._hierarchy = None
+        self._groups: List[np.ndarray] = []  # row-index arrays per scope group
+        self._envelopes: List[float] = []
+        self._next_t: Optional[float] = None
+
+    @property
+    def needs_forecast(self) -> bool:
+        return self.policy.needs_forecast
+
+    def bind(self, hierarchy) -> None:
+        """Attach the fleet's budget hierarchy (called by FleetSimulator).
+        The scope envelopes are frozen here, from the *initial* budgets —
+        rebalancing moves watts inside the envelope, never grows it.
+        Binding resets the controller's schedule and event log, so one
+        controller instance reused across fleets starts each run fresh."""
+        self._next_t = None
+        self.events = []
+        self._hierarchy = hierarchy
+        if self.scope == "rack":
+            self._groups = [np.flatnonzero(hierarchy.rack_of == k)
+                            for k in range(hierarchy.n_racks)]
+            self._envelopes = [float(b) for b in hierarchy.rack_budget_w]
+        else:
+            self._groups = [np.arange(len(hierarchy.rack_of))]
+            self._envelopes = [hierarchy.cluster_budget_w]
+
+    def maybe_rebalance(self, t: float, rows, row_w: np.ndarray,
+                        forecast_w: Optional[np.ndarray]) -> Optional[RebalanceEvent]:
+        """One controller tick. Returns the applied :class:`RebalanceEvent`,
+        or None when the interval hasn't elapsed or no budget moved."""
+        if self._hierarchy is None:
+            raise RuntimeError("FleetController.maybe_rebalance before bind()")
+        if self._next_t is None:
+            self._next_t = t + self.interval_s  # first interval measures
+            return None
+        if t < self._next_t:
+            return None
+        self._next_t += self.interval_s
+        demand = forecast_w if (self.policy.needs_forecast
+                                and forecast_w is not None) else row_w
+        before = np.asarray([r.provisioned_w for r in rows], float)
+        after = before.copy()
+        for idx, envelope in zip(self._groups, self._envelopes):
+            if len(idx) < 2:
+                continue  # a one-row group has nothing to trade
+            target = self.policy.target_budgets(demand[idx], before[idx], envelope)
+            if target is None:
+                continue
+            floor = self.min_share * envelope / len(idx)
+            stepped = before[idx] + self.alpha * (np.maximum(target, floor)
+                                                  - before[idx])
+            stepped = np.maximum(stepped, floor)
+            # exact conservation: scale the above-floor slack to the envelope
+            slack = stepped - floor
+            total_slack = float(slack.sum())
+            budget_slack = envelope - floor * len(idx)
+            if total_slack > 0.0:
+                after[idx] = floor + slack * (budget_slack / total_slack)
+            else:
+                after[idx] = envelope / len(idx)
+            assert abs(float(after[idx].sum()) - envelope) <= CONSERVATION_ATOL, \
+                (f"rebalance broke conservation: group sum "
+                 f"{float(after[idx].sum()):.6f} != envelope {envelope:.6f}")
+        moved_w = float(np.abs(after - before).sum()) / 2.0
+        if moved_w <= self.deadband_w:
+            return None
+        for r, b in zip(rows, after):
+            if b != r.provisioned_w:
+                r.set_budget(float(b), t)
+        ev = RebalanceEvent(t=t, budgets_before_w=before, budgets_after_w=after,
+                            demand_w=np.asarray(demand, float).copy(),
+                            policy=self.policy.name)
+        self.events.append(ev)
+        return ev
+
+
+# ---------------------------------------------------------------------------
+# registry (ControllerSpec round-trips through these by name)
+# ---------------------------------------------------------------------------
+
+REBALANCE_BUILDERS: Dict[str, Callable[..., RebalancePolicy]] = {
+    "static": StaticBudgetPolicy,
+    "proportional": ProportionalDemandPolicy,
+    "predictive": PredictiveRebalancePolicy,
+}
+
+
+def build_rebalance_policy(kind: str, params: Dict[str, Any] = None) -> RebalancePolicy:
+    """A fresh rebalance policy instance by registry name."""
+    try:
+        builder = REBALANCE_BUILDERS[kind]
+    except KeyError:
+        known = ", ".join(sorted(REBALANCE_BUILDERS))
+        raise KeyError(
+            f"unknown rebalance policy {kind!r}; registered: {known}") from None
+    return builder(**(params or {}))
+
+
+def build_controller(spec) -> FleetController:
+    """A :class:`FleetController` from a serializable
+    :class:`~repro.experiments.scenario.ControllerSpec`."""
+    return FleetController(
+        build_rebalance_policy(spec.kind, spec.params),
+        interval_s=spec.interval_s, scope=spec.scope,
+        alpha=spec.alpha, min_share=spec.min_share,
+        deadband_w=spec.deadband_w)

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.simulator import Request, RowSimulator, SimConfig, SimResult
 from repro.core.slo import LatencyStats
+from repro.fleet.controller import FleetController, PowerForecaster, RebalanceEvent
 from repro.fleet.router import (
     AdmissionController,
     AdmitAll,
@@ -73,6 +74,19 @@ class FleetResult:
     n_brakes: int = 0
     peak_cluster_frac: float = 0.0
     mean_cluster_frac: float = 0.0
+    # dynamic rebalancing telemetry (empty without a FleetController): the
+    # per-tick row budgets the row fractions were measured against, and the
+    # applied rebalance events (fleet.controller.RebalanceEvent)
+    row_budget_w: np.ndarray = field(default=None, repr=False)  # [T, R]
+    rebalances: List[RebalanceEvent] = field(default_factory=list, repr=False)
+
+    @property
+    def n_rebalances(self) -> int:
+        return len(self.rebalances)
+
+    def budget_moved_w(self) -> float:
+        """Total watts of budget the controller moved over the run."""
+        return float(sum(ev.moved_w() for ev in self.rebalances))
 
     @property
     def n_rows(self) -> int:
@@ -134,7 +148,8 @@ class FleetSimulator:
                  *, rows_per_rack: int = 2,
                  rack_budget_w: Optional[List[float]] = None,
                  cluster_budget_w: Optional[float] = None,
-                 telemetry_s: Optional[float] = None):
+                 telemetry_s: Optional[float] = None,
+                 controller: Optional[FleetController] = None):
         if not rows:
             raise ValueError("FleetSimulator needs at least one row")
         from repro.experiments.cluster import RackHierarchy
@@ -147,6 +162,18 @@ class FleetSimulator:
                                        cluster_budget_w=cluster_budget_w)
         self.telemetry_s = float(telemetry_s or rows[0].cfg.telemetry_s)
         self.duration = max(r.duration for r in rows)
+        self.controller = controller
+        if controller is not None:
+            controller.bind(self.hierarchy)
+        # one shared forecaster feeds both the predictive controller and
+        # forecast-consuming routers; None when nothing reads forecasts, so
+        # controller-less fleets skip the per-tick estimator entirely
+        need_fc = (getattr(router, "needs_forecast", False)
+                   or (controller is not None and controller.needs_forecast))
+        self._forecaster = (PowerForecaster(len(rows),
+                                            horizon_s=rows[0].cfg.oob_latency_s)
+                            if need_fc else None)
+        self._forecast_frac: Optional[np.ndarray] = None  # [R], one-tick-stale
 
         self.decisions: List[RoutingDecision] = []
         self.n_shed: Dict[str, int] = {"high": 0, "low": 0}
@@ -157,6 +184,7 @@ class FleetSimulator:
         self._stale_cluster_frac = 0.0
         self._ticks: List[float] = []
         self._samples: List[np.ndarray] = []
+        self._budget_samples: List[np.ndarray] = []
         self._shed_cum: List[int] = []
         # index-only placeholder views for routers with needs_views=False
         self._blind_views = [
@@ -191,6 +219,8 @@ class FleetSimulator:
             pool_size=len(cands),
             pool_idle=sum(1 for s in cands if s.state == "idle"),
             pool_queued=sum(len(s.queue) for s in cands),
+            forecast_frac=(float(self._forecast_frac[i])
+                           if self._forecast_frac is not None else None),
         )
 
     def _fleet_view(self, t: float) -> FleetView:
@@ -219,6 +249,9 @@ class FleetSimulator:
 
     # ------------------------------------------------------------------
     def start(self):
+        """Seed every row's event queue (idempotent). Part of the
+        ``start`` / ``advance_to`` / ``finalize`` drive protocol the
+        Monte-Carlo engine locksteps; ``run()`` composes all three."""
         if self._started:
             return
         self._started = True
@@ -248,22 +281,45 @@ class FleetSimulator:
                     self._publish_group_fracs(self._prev_row_w)
                 self._advance_rows(self._next_tick)
                 row_w = np.asarray([r.row_power for r in self.rows], float)
+                budgets = np.asarray([r.provisioned_w for r in self.rows], float)
                 self._ticks.append(self._next_tick)
                 self._samples.append(row_w)
+                self._budget_samples.append(budgets)
                 self._shed_cum.append(sum(self.n_shed.values()))
+                fc_w = None
+                if self._forecaster is not None:
+                    self._forecaster.observe(self._next_tick, row_w)
+                    fc_w = self._forecaster.forecast_w()
+                    self._forecast_frac = fc_w / budgets
+                if self.controller is not None:
+                    # budget changes land between ticks: each row's policy
+                    # sees them at its own next telemetry sample (one-tick
+                    # actuation delay, like every other control-plane path)
+                    self.controller.maybe_rebalance(self._next_tick, self.rows,
+                                                    row_w, fc_w)
                 self._prev_row_w = row_w
                 self._next_tick += self.telemetry_s
         return not (self._i >= len(self.requests)
                     and self._next_tick > self.duration)
 
     def finalize(self) -> FleetResult:
+        """Drain every row to its duration and assemble the structured
+        :class:`FleetResult` (per-row results, decision log, shed accounting,
+        folded power series, and — under a controller — the per-tick budget
+        matrix plus applied rebalance events). Call exactly once, after the
+        driver loop is done."""
         for r in self.rows:  # drain events between the last tick and duration
             r.advance_to(r.duration)
         row_results = [r.finalize() for r in self.rows]
         power = (np.stack(self._samples) if self._samples
                  else np.zeros((0, len(self.rows))))  # [T, R] watts
+        budgets = (np.stack(self._budget_samples) if self._budget_samples
+                   else np.zeros((0, len(self.rows))))  # [T, R] watts
         power_t = np.asarray(self._ticks)
-        row_frac, rack_frac, cluster_frac = self.hierarchy.fold(power)
+        _, rack_frac, cluster_frac = self.hierarchy.fold(power)
+        # row fractions against the budgets actually in force at each tick
+        # (identical to the hierarchy's static fold when no budget ever moved)
+        row_frac = power / budgets if len(power) else power
         return FleetResult(
             row_results=row_results,
             decisions=self.decisions,
@@ -278,9 +334,15 @@ class FleetSimulator:
             n_brakes=sum(rr.n_brakes for rr in row_results),
             peak_cluster_frac=float(cluster_frac.max()) if len(cluster_frac) else 0.0,
             mean_cluster_frac=float(cluster_frac.mean()) if len(cluster_frac) else 0.0,
+            row_budget_w=budgets,
+            rebalances=(list(self.controller.events)
+                        if self.controller is not None else []),
         )
 
     def run(self) -> FleetResult:
+        """Standalone drive: ``start`` + ``advance_to(duration)`` +
+        ``finalize`` — bit-identical to any other stride over the same
+        span (the drive protocol is stride-invariant)."""
         self.start()
         self.advance_to(self.duration)
         return self.finalize()
@@ -323,13 +385,20 @@ def build_fleet(scenario, workloads, shares, server,
                 requests: List[Request], *, reference: bool = False) -> FleetSimulator:
     """A FleetSimulator for ``scenario`` (which must carry a RoutingSpec).
 
+    A scenario carrying a :class:`~repro.experiments.scenario.ControllerSpec`
+    additionally gets a :class:`~repro.fleet.controller.FleetController`
+    rebalancing row budgets on the telemetry grid.
+
     ``reference=True`` builds the uncapped twin: NoCap policies on
     effectively-infinite row budgets, same router and admission spec (no
     emergency ever triggers, so nothing is shed) — the paper's
-    capping-impact-only baseline, fleet-shaped.
+    capping-impact-only baseline, fleet-shaped. References never carry a
+    controller: with nothing capped there is no headroom to move, and the
+    baseline must isolate power-management impact.
     """
     from repro.core.policy import NoCap
     from repro.experiments.runner import row_sim
+    from repro.fleet.controller import build_controller
     from repro.fleet.router import build_admission, build_router
 
     spec = scenario.routing
@@ -349,9 +418,13 @@ def build_fleet(scenario, workloads, shares, server,
         for i in range(fleet.n_rows):
             rows.append(row_sim(scenario, workloads, shares, server,
                                 budgets[i], policy_factory(), [], row_index=i))
+    cspec = getattr(scenario, "controller", None)
+    controller = (build_controller(cspec)
+                  if cspec is not None and not reference else None)
     return FleetSimulator(
         rows, requests,
         router=build_router(spec.router, spec.params),
         admission=build_admission(spec.admission, spec.admission_params),
         rows_per_rack=fleet.rows_per_rack,
-        telemetry_s=scenario.telemetry.telemetry_s)
+        telemetry_s=scenario.telemetry.telemetry_s,
+        controller=controller)

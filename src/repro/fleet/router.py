@@ -20,12 +20,15 @@ Routers and admission controllers are registered by name so
   | power-headroom   | most watts of headroom against the row budget        |
   | cap-aware        | least cap-severe tier for the request's priority,    |
   |                  | join-shortest-queue within the tier                  |
+  | forecast-aware   | cap-aware cost plus a graded penalty on rows whose   |
+  |                  | forecast power crosses the budget over the 40 s OOB  |
+  |                  | horizon (consumes the shared PowerForecaster)        |
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.simulator import Request
 
@@ -47,6 +50,10 @@ class RowView:
     pool_size: int
     pool_idle: int  # idle servers in the pool
     pool_queued: int  # requests waiting in pool buffers
+    # predicted row power / row budget over the 40 s OOB horizon, from the
+    # fleet's shared PowerForecaster (one-tick-stale, like the group fracs);
+    # None when no forecast consumer is configured
+    forecast_frac: Optional[float] = None
 
     @property
     def pool_pending(self) -> int:
@@ -73,6 +80,9 @@ class Router:
 
     name: str = "router"
     needs_views: bool = True
+    # routers that read RowView.forecast_frac set this; the fleet driver
+    # then maintains a shared PowerForecaster on the telemetry grid
+    needs_forecast: bool = False
 
     def route(self, req: Request, views: List[RowView]) -> Tuple[int, str]:
         raise NotImplementedError
@@ -172,6 +182,46 @@ class CapAwareRouter(Router):
         return best.index, f"cap-aware/{_severity_tag(best, req.priority)}"
 
 
+@dataclass
+class ForecastAwareRouter(CapAwareRouter):
+    """Cap-aware routing that also consumes the fleet's power *forecast*
+    (ROADMAP item: routers that consume the predictive policy's power
+    forecast). On top of the cap-severity cost, a row whose predicted power
+    over the 40 s OOB horizon crosses ``forecast_threshold`` of its budget
+    pays a penalty proportional to the predicted overshoot — load is steered
+    away *before* the row's controller has to cap, which is 40 s earlier
+    than the commanded-cap-state signal can react. The penalty is graded for
+    the same reason the cap penalties are: a hard avoid-predicted-hot rule
+    collapses load onto the cold rows and makes the forecast self-defeating.
+
+    Pairs naturally with the predictive :class:`~repro.fleet.controller.
+    FleetController` (both read the same shared forecaster): the controller
+    moves budget toward predicted demand while this router moves marginal
+    demand away from predicted congestion."""
+
+    # predicted crossings of T2 start costing; a predicted brake (>= 1.0 of
+    # budget) costs forecast_penalty * (1 - threshold) ~ 1.1 pool-load units
+    forecast_threshold: float = 0.89
+    forecast_penalty: float = 10.0
+    name: str = "forecast-aware"
+    needs_forecast: bool = True
+
+    def _cost(self, v: RowView, priority: str) -> float:
+        cost = super()._cost(v, priority)
+        if v.forecast_frac is not None and v.forecast_frac > self.forecast_threshold:
+            cost += self.forecast_penalty * (v.forecast_frac
+                                             - self.forecast_threshold)
+        return cost
+
+    def route(self, req: Request, views: List[RowView]) -> Tuple[int, str]:
+        best = min(views, key=lambda v: (self._cost(v, req.priority), v.index))
+        tag = _severity_tag(best, req.priority)
+        if (tag == "uncapped" and best.forecast_frac is not None
+                and best.forecast_frac > self.forecast_threshold):
+            tag = "forecast-hot"
+        return best.index, f"forecast-aware/{tag}"
+
+
 # ---------------------------------------------------------------------------
 # admission control
 # ---------------------------------------------------------------------------
@@ -227,6 +277,7 @@ ROUTER_BUILDERS: Dict[str, Callable[..., Router]] = {
     "jsq": JoinShortestQueueRouter,
     "power-headroom": PowerHeadroomRouter,
     "cap-aware": CapAwareRouter,
+    "forecast-aware": ForecastAwareRouter,
 }
 
 ADMISSION_BUILDERS: Dict[str, Callable[..., AdmissionController]] = {

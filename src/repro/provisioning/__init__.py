@@ -28,6 +28,7 @@ from repro.provisioning.planner import (
     PlanResult,
     RiskConstraints,
     plan_capacity,
+    plan_controller_comparison,
     plan_scenarios,
 )
 
@@ -45,6 +46,7 @@ __all__ = [
     "compose_rows",
     "compose_site",
     "plan_capacity",
+    "plan_controller_comparison",
     "plan_scenarios",
     "resolve_ensemble_budget",
     "run_ensemble",

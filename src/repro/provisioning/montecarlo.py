@@ -32,7 +32,12 @@ Members are not restricted to single rows: a scenario carrying a
 (:class:`~repro.fleet.fleet.FleetSimulator`, DESIGN.md §10) through the same
 lockstep protocol, with its cluster-level power series and pooled latencies
 feeding the distributional statistics — so capacity planning runs over
-multi-row fleets exactly as over rows.
+multi-row fleets exactly as over rows. Fleet members carrying a
+``ControllerSpec`` additionally run under the dynamic power-rebalancing
+controller (DESIGN.md §11); their uncapped reference twins never do, so the
+SLO gate still isolates power-management impact. That is what lets
+``plan_capacity`` (and ``plan_controller_comparison``) quantify how much
+safe oversubscription rebalancing buys back.
 """
 
 from __future__ import annotations
@@ -85,6 +90,7 @@ class EnsembleSpec:
     with_reference: bool = False
 
     def seeds(self) -> List[int]:
+        """The member seeds, in member order: ``seed0 + k`` for member k."""
         return [self.seed0 + k for k in range(self.n_seeds)]
 
     def member_scenarios(self, budget_w: Optional[float] = None) -> List[Scenario]:
@@ -109,6 +115,7 @@ class MemberStats:
 
     @property
     def meets(self) -> bool:
+        """Whether this member meets its scenario's SLO (brakes included)."""
         return meets_slo(self.stats, self.result.n_brakes, self.scenario.slo)
 
 
@@ -177,6 +184,7 @@ class EnsembleResult:
             for m in self.members]))
 
     def summary(self) -> Dict[str, float]:
+        """Headline distributional stats in one flat dict (benchmark rows)."""
         return {
             "n_members": float(self.n_members),
             "brake_prob": self.brake_prob(),
@@ -232,7 +240,8 @@ def _run_shard(payload: Tuple[List[Scenario], float]) -> List[Tuple[SimResult, L
     uncapped reference simulation in the same lockstep pass. Members whose
     scenario carries a RoutingSpec run as whole routed fleets
     (:class:`~repro.fleet.fleet.FleetSimulator`) — multi-row ensemble members
-    lockstep next to single-row ones through the same drive protocol."""
+    lockstep next to single-row ones through the same drive protocol, with
+    any declared ControllerSpec rebalancing their row budgets in-run."""
     scenarios, stride = payload
     sims: List[object] = []
     refs: List[Optional[object]] = []

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.slo import DEFAULT_SLO, SLO, meets_slo
 from repro.experiments.scenario import Scenario
@@ -91,6 +91,7 @@ class PlanResult:
         return self.n_provisioned + self.safe_added_servers
 
     def summary(self) -> Dict[str, float]:
+        """The search verdict in one flat dict (benchmark rows)."""
         return {"safe_added_frac": self.safe_added_frac,
                 "safe_n_servers": float(self.safe_n_servers),
                 "budget_w": self.budget_w,
@@ -158,6 +159,39 @@ def plan_capacity(base: Scenario, *,
         else:
             hi = mid
     return PlanResult(base.name, n_prov, budget, lo, probes)
+
+
+def plan_controller_comparison(base: Scenario,
+                               kinds: Sequence[str] = ("static", "predictive"),
+                               *,
+                               constraints: RiskConstraints = RiskConstraints(),
+                               n_seeds: int = 4, seed0: int = 1000,
+                               max_added_frac: float = 0.60,
+                               budget_w: Optional[float] = None,
+                               n_workers: Optional[int] = None) -> Dict[str, PlanResult]:
+    """How much safe oversubscription dynamic rebalancing buys back.
+
+    Plans the same routed-fleet scenario once per
+    :class:`~repro.experiments.scenario.ControllerSpec` kind — every plan
+    shares the same traffic family, router, and (pinned) power envelope, so
+    the difference in ``safe_added_servers`` between ``static`` and a
+    dynamic policy is attributable to budget rebalancing alone. ``base``
+    must carry a RoutingSpec; its ControllerSpec (when present) supplies the
+    interval/scope/step settings each kind inherits.
+    """
+    if base.routing is None:
+        raise ValueError(
+            f"plan_controller_comparison needs a routed-fleet scenario; "
+            f"{base.name!r} has no RoutingSpec")
+    budget = (resolve_ensemble_budget(base) if budget_w is None
+              else float(budget_w))
+    out: Dict[str, PlanResult] = {}
+    for kind in kinds:
+        sc = base.with_controller(kind).with_(name=f"{base.name}+{kind}")
+        out[kind] = plan_capacity(sc, constraints=constraints, n_seeds=n_seeds,
+                                  seed0=seed0, max_added_frac=max_added_frac,
+                                  budget_w=budget, n_workers=n_workers)
+    return out
 
 
 def plan_scenarios(bases: List[Scenario], *,

@@ -1,0 +1,58 @@
+"""Documentation stays true: the generated scenario reference matches the
+live registry, and the docs/README cross-link structure exists."""
+
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _gen_module():
+    sys.path.insert(0, os.path.join(ROOT, "tools"))
+    try:
+        import gen_scenario_docs
+    finally:
+        sys.path.pop(0)
+    return gen_scenario_docs
+
+
+def test_scenario_docs_in_sync_with_registry():
+    """Acceptance: docs/scenarios.md is exactly what the generator emits for
+    the current registry (regenerate with tools/gen_scenario_docs.py)."""
+    gen = _gen_module()
+    path = os.path.join(ROOT, "docs", "scenarios.md")
+    assert os.path.exists(path), "docs/scenarios.md missing; run the generator"
+    with open(path) as fh:
+        on_disk = fh.read()
+    assert on_disk == gen.generate(), (
+        "docs/scenarios.md is out of sync with the scenario registry; "
+        "run: PYTHONPATH=src python tools/gen_scenario_docs.py")
+
+
+def test_scenario_docs_cover_every_registered_scenario():
+    import repro.provisioning  # noqa: F401  (registers mc-* scenarios)
+    from repro.experiments import list_scenarios
+    with open(os.path.join(ROOT, "docs", "scenarios.md")) as fh:
+        text = fh.read()
+    for name in list_scenarios():
+        assert f"`{name}`" in text, f"scenario {name!r} missing from docs"
+
+
+@pytest.mark.parametrize("path", [
+    "README.md",
+    os.path.join("docs", "architecture.md"),
+    os.path.join("docs", "quickstart.md"),
+    os.path.join("docs", "scenarios.md"),
+])
+def test_docs_pages_exist(path):
+    assert os.path.exists(os.path.join(ROOT, path))
+
+
+def test_readme_links_docs_and_design():
+    with open(os.path.join(ROOT, "README.md")) as fh:
+        text = fh.read()
+    for target in ("docs/architecture.md", "docs/quickstart.md",
+                   "docs/scenarios.md", "DESIGN.md"):
+        assert target in text, f"README.md must link {target}"

@@ -1,0 +1,159 @@
+#!/usr/bin/env python
+"""Generate docs/scenarios.md from the live scenario registry.
+
+Every named scenario (``table2-*``, ``fig*``, ``cluster-*``, ``mc-*``,
+``fleet-*``, ``fleet-rebalance-*``) is rendered into one reference table, so
+the docs cannot drift from the code: a tier-1 test regenerates this file in
+memory and asserts it matches what is checked in, and ``--check`` does the
+same from the command line (wired into ``tools/smoke.sh`` / CI).
+
+  PYTHONPATH=src python tools/gen_scenario_docs.py          # rewrite
+  PYTHONPATH=src python tools/gen_scenario_docs.py --check  # verify only
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DOC_PATH = os.path.join(os.path.dirname(__file__), "..", "docs", "scenarios.md")
+
+HEADER = """\
+# Scenario reference
+
+<!-- GENERATED FILE — do not edit by hand.
+     Regenerate with: PYTHONPATH=src python tools/gen_scenario_docs.py
+     A tier-1 test (tests/test_docs.py) asserts this file matches the
+     registry; tools/smoke.sh runs the same check before merge. -->
+
+Every experiment in this repo is a named, JSON-serializable
+[`Scenario`](architecture.md) in a process-wide registry
+(`repro.experiments.get_scenario`). Benchmarks, tests, and the examples
+share these exact configurations; variants derive from them with
+`with_()` / `with_fleet()` / `with_policy()` / `with_routing()` /
+`with_controller()`.
+
+Run any scenario end to end with:
+
+```python
+from repro.experiments import get_scenario, run_experiment
+import repro.provisioning  # registers the mc-* generator families
+
+outcome = run_experiment(get_scenario("fleet-rebalance-predictive"))
+```
+
+| scenario | duration | fleet | traffic | policy | routing | controller | budget |
+|---|---|---|---|---|---|---|---|
+"""
+
+FOOTER = """
+**Column notes.** *fleet* is `n_rows x n_servers` actually hosted
+(`n_provisioned x (1 + added_frac)` per row); a trailing `derated` marks
+heterogeneous per-row budgets (`FleetSpec.row_budget_fracs`). *traffic*
+names the occupancy generator and its peak busy-server fraction. *routing*
+is `router/admission` for fleet scenarios (empty for pre-baked per-row
+traces). *controller* is the power-rebalancing policy
+(`ControllerSpec.kind`, with its rebalance interval) for dynamically
+rebalanced fleets. *budget* is the row power envelope rule: `calibrated`
+(Table-2 79%-peak operating point), `nominal` (n_provisioned x server
+rating), or explicit watts.
+"""
+
+
+def _fmt_duration(s: float) -> str:
+    day = 86_400.0
+    if s % (7 * day) == 0:
+        return f"{int(s // (7 * day))} w"
+    if s % day == 0:
+        return f"{int(s // day)} d"
+    if s % 3600.0 == 0:
+        return f"{int(s // 3600.0)} h"
+    hours = f"{s / 3600.0:.2f}".rstrip("0").rstrip(".")
+    return f"{hours} h"
+
+
+def _fmt_fleet(sc) -> str:
+    f = sc.fleet
+    txt = f"{f.n_rows} x {f.n_servers}"
+    if f.added_frac:
+        txt += f" (+{f.added_frac:.0%})"
+    if f.row_budget_fracs is not None:
+        txt += " derated"
+    return txt
+
+
+def _fmt_traffic(sc) -> str:
+    t = sc.traffic
+    txt = f"{t.generator} @{t.occ_peak:.2f}"
+    if t.priority_mix_override is not None:
+        txt += f" hp={t.priority_mix_override:.2f}"
+    return txt
+
+
+def _fmt_routing(sc) -> str:
+    r = sc.routing
+    if r is None:
+        return ""
+    return r.router if r.admission == "admit-all" else f"{r.router}/{r.admission}"
+
+
+def _fmt_controller(sc) -> str:
+    c = getattr(sc, "controller", None)
+    if c is None:
+        return ""
+    return f"{c.kind} @{c.interval_s:.0f}s"
+
+
+def _fmt_budget(sc) -> str:
+    if isinstance(sc.budget, str):
+        return sc.budget
+    return f"{sc.budget:.0f} W"
+
+
+def generate() -> str:
+    """The full docs/scenarios.md contents for the current registry."""
+    import repro.provisioning  # noqa: F401  (registers mc-* scenarios)
+    from repro.experiments import get_scenario, list_scenarios
+
+    rows = []
+    for name in list_scenarios():
+        sc = get_scenario(name)
+        rows.append(
+            f"| `{name}` | {_fmt_duration(sc.duration_s)} | {_fmt_fleet(sc)} "
+            f"| {_fmt_traffic(sc)} | {sc.policy.kind} | {_fmt_routing(sc)} "
+            f"| {_fmt_controller(sc)} | {_fmt_budget(sc)} |")
+    return HEADER + "\n".join(rows) + "\n" + FOOTER
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if docs/scenarios.md is out of sync")
+    args = ap.parse_args()
+    text = generate()
+    path = os.path.normpath(DOC_PATH)
+    if args.check:
+        try:
+            with open(path) as fh:
+                on_disk = fh.read()
+        except FileNotFoundError:
+            print(f"missing {path}; run tools/gen_scenario_docs.py")
+            return 1
+        if on_disk != text:
+            print(f"{path} is out of sync with the scenario registry; "
+                  "run: PYTHONPATH=src python tools/gen_scenario_docs.py")
+            return 1
+        print(f"{path} in sync ({len(text.splitlines())} lines)")
+        return 0
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as fh:
+        fh.write(text)
+    print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,4 +20,10 @@ python -m benchmarks.run --quick --only capacity
 echo "== fleet-routing quick benchmark =="
 python -m benchmarks.run --quick --only fleet_routing
 
+echo "== fleet-rebalance quick benchmark =="
+python -m benchmarks.run --quick --only fleet_rebalance
+
+echo "== scenario docs sync check =="
+python tools/gen_scenario_docs.py --check
+
 echo "smoke OK"

@@ -20,7 +20,7 @@ import time
 import numpy as np
 
 from benchmarks.common import Bench, WEEK, module_main, seeded
-from repro.experiments import get_scenario, run_experiment
+from repro.experiments import FLEET_SCENARIO_FAMILY, get_scenario, run_experiment
 from repro.provisioning import (
     MC_BASE_NAME,
     MC_SCENARIO_FAMILY,
@@ -68,6 +68,37 @@ def run(quick: bool = False) -> Bench:
           f"{min(p.safe_added_frac for p in plans.values()):.1%}.."
           f"{max(p.safe_added_frac for p in plans.values()):.1%}",
           0.0, n_reported >= 5)
+
+    # ---- fleet-* family: plan the routed-fleet scenarios (ROADMAP item) ----
+    # the planner sweeps the whole dispatch-policy family against ONE pinned
+    # envelope: how far the same power stretches under each router. Smoke
+    # mode keeps one seed and a short horizon; full mode plans properly.
+    fl_dur = 1800.0 if quick else 2 * 3600.0
+    fl_seeds = 1 if quick else 2
+    fl_max = 0.10 if quick else 0.30
+    fleet_bases = [seeded(get_scenario(name)).with_(duration_s=fl_dur)
+                   for name in FLEET_SCENARIO_FAMILY]
+    fl_budget = resolve_ensemble_budget(fleet_bases[0])
+    t0 = time.perf_counter()
+    fl_plans = plan_scenarios(fleet_bases, n_seeds=fl_seeds, seed0=1000,
+                              budget_w=fl_budget, max_added_frac=fl_max)
+    us = (time.perf_counter() - t0) * 1e6
+    for name in FLEET_SCENARIO_FAMILY:
+        p = fl_plans[name]
+        note = (" (capped)" if p.capped else
+                "" if p.feasible_at_zero else
+                " (infeasible even at the provisioned fleet)")
+        b.add(f"capacity/fleet_safe_ratio/{name}",
+              f"+{p.safe_added_frac:.1%} ({p.safe_n_servers} servers/row on "
+              f"{p.n_provisioned}-server row budgets, "
+              f"{len(p.probes)} probes){note}",
+              us if name == FLEET_SCENARIO_FAMILY[0] else 0.0, None)
+    b.add("capacity/fleet_family_planned",
+          f"{len(fl_plans)} routed-fleet scenarios planned against one "
+          f"envelope (need {len(FLEET_SCENARIO_FAMILY)}); ratios span "
+          f"{min(p.safe_added_frac for p in fl_plans.values()):.1%}.."
+          f"{max(p.safe_added_frac for p in fl_plans.values()):.1%}",
+          0.0, len(fl_plans) == len(FLEET_SCENARIO_FAMILY))
 
     # ---- batched engine vs the naive sequential run_experiment loop --------
     spd_base = (seeded(get_scenario(MC_BASE_NAME))

@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.capacity_planning",
     "benchmarks.fleet_routing",
     "benchmarks.fleet_rebalance",
+    "benchmarks.site_hierarchy",
     "benchmarks.phase_aware_savings",
     "benchmarks.kernel_micro",
     "benchmarks.roofline_table",

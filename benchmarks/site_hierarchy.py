@@ -1,0 +1,154 @@
+"""Site-scale hierarchical power rebalancing (DESIGN.md §12).
+
+Validates the :class:`~repro.core.hierarchy.PowerHierarchy` layer's three
+claims on the registered ``site-*`` scenarios — a 12-row site (2 PDU sets x
+2 racks x 3 rows) whose second rack sits on a 30%-derated, planner-shaped
+PDU budget:
+
+  * **hierarchical rebalancing buys back site-level headroom that flat
+    budgets strand** — static budgets powerbrake the derated rack and blow
+    the Table-5 HP SLO; *rack-scope* rebalancing cannot help (all three
+    siblings inside the derated rack are equally starved — the slack lives
+    on the *sibling rack and the other PDU set*, unreachable from a flat
+    per-rack scope); tree-scope predictive rebalancing, re-dividing the
+    site envelope recursively across PDU sets -> racks -> rows, meets the
+    HP SLOs with zero powerbrakes on the same trace and envelope;
+  * **conservation is per-node**: on every applied rebalance and every
+    telemetry tick, each interior node's budget equals the sum of its
+    children's, and the site (root) envelope never moves;
+  * **the refactor is invisible to two-level scenarios**: an existing
+    ``fleet-*`` scenario run through an explicit two-level
+    :class:`~repro.experiments.scenario.HierarchySpec` is bit-identical
+    (latencies, decisions, power fractions) to the default rack-split path
+    — the same parity the tier-1 suite asserts for the pre-refactor code.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, module_main, seeded
+from repro.experiments import (
+    SITE_SCENARIO_FAMILY,
+    HierarchySpec,
+    get_scenario,
+    run_experiment,
+)
+from repro.experiments.runner import build_workloads, resolve_budget
+
+HP_P50_SLO = 0.01  # Table 5
+HP_P99_SLO = 0.05
+
+
+def _node_conservation_ok(hierarchy, node_budget_w: np.ndarray,
+                          atol: float = 1e-3) -> bool:
+    """Every interior node's per-tick budget equals its children's sum."""
+    for i in range(hierarchy.n_leaves, hierarchy.n_nodes):
+        kids = hierarchy.children[i]
+        if not np.allclose(node_budget_w[:, kids].sum(axis=1),
+                           node_budget_w[:, i], atol=atol):
+            return False
+    return True
+
+
+def run(quick: bool = False) -> Bench:
+    b = Bench()
+    dur = 2 * 3600.0 if quick else None  # registered: 6 h
+    base = seeded(get_scenario("site-static"))
+    if dur is not None:
+        base = base.with_(duration_s=dur)
+    wls, shares = build_workloads(base)
+    budget = resolve_budget(base, wls, shares, base.fleet.server())
+    hierarchy = base.hierarchy.build(np.ones(base.fleet.n_rows))
+
+    summaries = {}
+    for name in SITE_SCENARIO_FAMILY:
+        sc = seeded(get_scenario(name)).with_(duration_s=base.duration_s,
+                                              budget=budget)
+        t0 = time.perf_counter()
+        o = run_experiment(sc)
+        us = (time.perf_counter() - t0) * 1e6
+        kind = name.removeprefix("site-")
+        summaries[kind] = o
+        s = o.stats.summary()
+        f = o.fleet
+        b.add(f"site/{kind}",
+              f"hp_p99={s['hp_p99']:.1%} lp_p99={s['lp_p99']:.1%} "
+              f"brakes={o.result.n_brakes} rebalances={f.n_rebalances} "
+              f"moved={f.budget_moved_w() / 1e3:.0f}kW", us, None)
+
+    # ---- headline: only the recursive (tree) scope recovers the site ------
+    st = summaries["static"]
+    rk = summaries["rack-predictive"]
+    tr = summaries["tree-predictive"]
+    st_s, rk_s, tr_s = (o.stats.summary() for o in (st, rk, tr))
+    static_violates = (st_s["hp_p99"] >= HP_P99_SLO or st.result.n_brakes > 0)
+    rack_violates = (rk_s["hp_p99"] >= HP_P99_SLO or rk.result.n_brakes > 0)
+    tree_meets = (tr_s["hp_p50"] < HP_P50_SLO and tr_s["hp_p99"] < HP_P99_SLO
+                  and tr.result.n_brakes == 0)
+    b.add("site/tree_recovers_site_slo",
+          f"static hp_p99={st_s['hp_p99']:.1%}/{st.result.n_brakes} brakes, "
+          f"tree hp_p99={tr_s['hp_p99']:.2%}/{tr.result.n_brakes} brakes "
+          f"on the same trace + site envelope",
+          0.0, static_violates and tree_meets)
+    b.add("site/rack_scope_strands_headroom",
+          f"rack-scope rebalancing hp_p99={rk_s['hp_p99']:.1%} "
+          f"brakes={rk.result.n_brakes} (cannot reach the sibling rack's "
+          f"slack); tree-scope brakes={tr.result.n_brakes}",
+          0.0, rack_violates and tree_meets)
+
+    # the derated rack's *interior node* budget actually grew: budget moved
+    # across racks, not just across rows inside one
+    names = list(tr.fleet.node_names)
+    derated = names.index("rack0.1")
+    col = tr.fleet.node_budget_w[:, derated]
+    uplift = float(col.max() / col[0] - 1.0)
+    b.add("site/derated_rack_uplift",
+          f"rack0.1 budget peak uplift {uplift:.1%} "
+          f"(from {col[0] / 1e3:.0f}kW; an interior-node rebalance)",
+          0.0, uplift > 0.0)
+
+    # ---- per-node conservation, every rebalance + every tick --------------
+    ok = tr.fleet.n_rebalances > 0
+    for ev in tr.fleet.rebalances:
+        na = ev.node_budgets_after_w
+        ok = ok and na is not None
+        if na is None:
+            continue
+        for i in range(hierarchy.n_leaves, hierarchy.n_nodes):
+            kids = hierarchy.children[i]
+            ok = ok and abs(float(na[kids].sum()) - float(na[i])) <= 1e-3
+        ok = ok and float(na[hierarchy.root]) == float(
+            ev.node_budgets_before_w[hierarchy.root])
+    ok = ok and _node_conservation_ok(hierarchy, tr.fleet.node_budget_w)
+    root_col = tr.fleet.node_budget_w[:, hierarchy.root]
+    ok = ok and np.allclose(root_col, root_col[0], atol=1e-6)
+    b.add("site/per_node_conservation",
+          f"{tr.fleet.n_rebalances} rebalances x "
+          f"{hierarchy.n_nodes - hierarchy.n_leaves} interior nodes: "
+          f"children sums == node budgets; root envelope frozen at "
+          f"{root_col[0] / 1e3:.0f}kW", 0.0, ok)
+
+    # ---- two-level scenarios are bit-identical through the new path -------
+    par = seeded(get_scenario("fleet-cap-aware")).with_(
+        duration_s=min(base.duration_s, 1800.0), compare_to_reference=False)
+    a = run_experiment(par)
+    spec = HierarchySpec(shape=(3, 2), level_names=("cluster", "rack"))
+    c = run_experiment(par.with_(hierarchy=spec))
+    bit = (a.result.latencies == c.result.latencies
+           and a.fleet.decisions == c.fleet.decisions
+           and np.array_equal(a.fleet.cluster_power_frac,
+                              c.fleet.cluster_power_frac)
+           and np.array_equal(a.fleet.row_power_frac, c.fleet.row_power_frac)
+           and np.array_equal(a.fleet.rack_power_frac,
+                              c.fleet.rack_power_frac))
+    b.add("site/two_level_bit_parity",
+          f"fleet-cap-aware via explicit two-level HierarchySpec == default "
+          f"rack split: {bit}", 0.0, bit)
+    return b
+
+
+if __name__ == "__main__":
+    module_main(run)

@@ -123,9 +123,14 @@ class RowSimulator:
         self.duration = duration or (requests[-1].t_arrival + 600 if requests else 600)
         self.rng = np.random.default_rng(rng_seed)
         self.row_index = row_index
-        # filled in by ClusterSimulator before each lockstep tick (one tick
-        # stale — rack managers aggregate with delay); None on standalone rows
-        self.group_fracs: Tuple[Optional[float], Optional[float]] = (None, None)
+        # ancestor budget fractions, published by the hierarchy driver
+        # (ClusterSimulator / FleetSimulator) before each lockstep tick (one
+        # tick stale — rack managers aggregate with delay): a level-indexed
+        # vector ordered nearest enclosure first (rack, [pdu-set, ...], root).
+        # (None, None) on standalone rows. Read/write through the
+        # ``group_fracs`` property (legacy 2-tuple view) or
+        # ``group_frac_vec`` (the full vector).
+        self._group_frac_vec: Tuple[Optional[float], ...] = (None, None)
 
         # dedicate servers to workload classes per the Table-4 share
         self.servers: List[_Server] = []
@@ -178,6 +183,28 @@ class RowSimulator:
         self._frac_integral = 0.0
 
     # ------------------------------------------------------------------
+    @property
+    def group_frac_vec(self) -> Tuple[Optional[float], ...]:
+        """Ancestor budget fractions, nearest level first, root last."""
+        return self._group_frac_vec
+
+    @property
+    def group_fracs(self) -> Tuple[Optional[float], Optional[float]]:
+        """Back-compat 2-tuple view of :attr:`group_frac_vec`:
+        ``(rack_frac, cluster_frac)`` = (nearest enclosure, root). On the
+        classic two-level tree this is exactly the full vector; on deeper
+        trees the intermediate levels are visible via ``group_frac_vec``."""
+        vec = self._group_frac_vec
+        if not vec:
+            return (None, None)
+        return (vec[0], vec[-1])
+
+    @group_fracs.setter
+    def group_fracs(self, vec) -> None:
+        """Accepts a tuple of any depth >= 1 (hierarchy publishers write the
+        full ancestor vector here; legacy writers pass the 2-tuple)."""
+        self._group_frac_vec = tuple(vec)
+
     def _push(self, t, kind, args=()):
         self._eid += 1
         heapq.heappush(self.events, (t, self._eid, kind, args))
@@ -355,6 +382,8 @@ class RowSimulator:
     def sample_telemetry(self, t: float) -> Telemetry:
         """The structured controller sample at time t (see core.telemetry)."""
         rack_frac, cluster_frac = self.group_fracs
+        vec = self._group_frac_vec
+        group_vec = vec if (vec and vec[0] is not None) else None
         return Telemetry(
             t=t,
             power_frac=self.row_power / self.provisioned_w,
@@ -367,6 +396,7 @@ class RowSimulator:
             row_index=self.row_index,
             rack_power_frac=rack_frac,
             cluster_power_frac=cluster_frac,
+            group_power_fracs=group_vec,
         )
 
     def _handle(self, t: float, kind: str, args: tuple):

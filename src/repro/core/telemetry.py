@@ -16,7 +16,7 @@ via ``Telemetry.from_power_frac``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 from repro.core.power_model import FREQ_UNCAPPED
 
@@ -40,6 +40,13 @@ class Telemetry:
     row_index: int = 0
     rack_power_frac: Optional[float] = None
     cluster_power_frac: Optional[float] = None
+    # budget fractions of every enclosing hierarchy level, nearest first
+    # (rack), root last (cluster/site) — the full vector behind the two
+    # convenience fields above; None outside hierarchy-driven runs. On the
+    # classic two-level tree this is exactly (rack_power_frac,
+    # cluster_power_frac); deeper site trees (row -> rack -> pdu-set ->
+    # site) expose the intermediate levels here.
+    group_power_fracs: Optional[Tuple[float, ...]] = None
 
     @classmethod
     def from_power_frac(cls, p: float, t: float = 0.0) -> "Telemetry":

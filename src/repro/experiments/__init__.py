@@ -7,14 +7,16 @@ telemetry x seed), run it with :func:`run_experiment`, and read a structured
 :class:`~repro.core.telemetry.Telemetry` samples. See DESIGN.md §8.
 """
 
+from repro.core.hierarchy import PowerHierarchy
 from repro.core.telemetry import Telemetry, TelemetryPolicy, dispatch
-from repro.experiments.cluster import ClusterResult, ClusterSimulator
+from repro.experiments.cluster import ClusterResult, ClusterSimulator, RackHierarchy
 from repro.experiments.runner import (
     BASELINE_PEAK_UTIL,
     ExperimentResult,
     build_workloads,
     calibrated_budget,
     resolve_budget,
+    row_budgets,
     row_sim,
     row_trace,
     run_experiment,
@@ -22,9 +24,12 @@ from repro.experiments.runner import (
 )
 from repro.experiments.scenario import (
     DAY,
+    FLEET_SCENARIO_FAMILY,
+    SITE_SCENARIO_FAMILY,
     WEEK,
     ControllerSpec,
     FleetSpec,
+    HierarchySpec,
     PolicySpec,
     RoutingSpec,
     Scenario,
@@ -42,7 +47,12 @@ __all__ = [
     "ControllerSpec",
     "DAY",
     "ExperimentResult",
+    "FLEET_SCENARIO_FAMILY",
     "FleetSpec",
+    "HierarchySpec",
+    "PowerHierarchy",
+    "RackHierarchy",
+    "SITE_SCENARIO_FAMILY",
     "PolicySpec",
     "RoutingSpec",
     "Scenario",
@@ -58,6 +68,7 @@ __all__ = [
     "list_scenarios",
     "register_scenario",
     "resolve_budget",
+    "row_budgets",
     "row_sim",
     "row_trace",
     "run_experiment",

@@ -1,28 +1,32 @@
 """Multi-row cluster simulation under hierarchical power budgets.
 
 ``ClusterSimulator`` composes N :class:`~repro.core.simulator.RowSimulator`
-instances into a row -> rack -> cluster hierarchy. Rows keep their own event
-queues, policies, and budgets; the cluster layer locksteps them on the
-telemetry grid and, before each tick, publishes one-tick-stale rack/cluster
-power fractions into every row's ``group_fracs`` (a real rack manager
-aggregates with exactly this delay). Row policies therefore see the full
-hierarchical :class:`~repro.core.telemetry.Telemetry` sample; policies that
-ignore the group fields behave exactly as on a standalone row — a cluster run
-whose per-row budget equals the single-row budget reproduces the standalone
+instances under a :class:`~repro.core.hierarchy.PowerHierarchy` — by default
+the classic row -> rack -> cluster split, but any arbitrary-depth budget tree
+(row -> rack -> PDU set -> site) plugs in via the ``hierarchy`` parameter.
+Rows keep their own event queues, policies, and budgets; the cluster layer
+locksteps them on the telemetry grid and, before each tick, publishes
+one-tick-stale ancestor power fractions into every row's ``group_fracs``
+vector (a real rack manager aggregates with exactly this delay). Row policies
+therefore see the full hierarchical
+:class:`~repro.core.telemetry.Telemetry` sample; policies that ignore the
+group fields behave exactly as on a standalone row — a cluster run whose
+per-row budget equals the single-row budget reproduces the standalone
 ``RowSimulator`` results bit-for-bit on the same trace.
 
 Power accounting is vectorized: per-tick row powers land in a [T, R] numpy
-array, and rack/cluster series are reductions over it.
+array, and every aggregation level is one fold over it
+(:meth:`~repro.core.hierarchy.PowerHierarchy.fold`).
 """
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.hierarchy import PowerHierarchy
 from repro.core.simulator import RowSimulator, SimResult
 
 
@@ -31,11 +35,15 @@ class ClusterResult:
     row_results: List[SimResult]
     power_t: np.ndarray = field(repr=False)  # [T] tick times
     row_power_frac: np.ndarray = field(repr=False)  # [T, R] of each row budget
-    rack_power_frac: np.ndarray = field(repr=False)  # [T, n_racks]
-    cluster_power_frac: np.ndarray = field(repr=False)  # [T] of cluster budget
+    rack_power_frac: np.ndarray = field(repr=False)  # [T, n_racks] (leaf parents)
+    cluster_power_frac: np.ndarray = field(repr=False)  # [T] of the root budget
     n_brakes: int = 0
     peak_cluster_frac: float = 0.0
     mean_cluster_frac: float = 0.0
+    # full per-node telemetry (leaves first, root last) — the two fields
+    # above are views into this for the rack level and the root
+    node_power_frac: Optional[np.ndarray] = field(default=None, repr=False)  # [T, N]
+    node_names: Tuple[str, ...] = ()
 
     @property
     def n_rows(self) -> int:
@@ -52,72 +60,100 @@ class ClusterResult:
         return float(diffs.max()) if len(diffs) else 0.0
 
 
-class RackHierarchy:
-    """Row -> rack -> cluster budget bookkeeping, shared by
-    :class:`ClusterSimulator` and the fleet driver
-    (:class:`repro.fleet.fleet.FleetSimulator`): rack assignment, budget
-    defaulting (each level defaults to the sum of its children), stale
-    group-fraction publishing, and the vectorized [T, R] power folding."""
+class RackHierarchy(PowerHierarchy):
+    """Thin two-level constructor over :class:`PowerHierarchy`: the classic
+    row -> rack -> cluster split shared by :class:`ClusterSimulator` and the
+    fleet driver (:class:`repro.fleet.fleet.FleetSimulator`). Rack assignment
+    (consecutive runs of ``rows_per_rack``), budget defaulting (each level
+    the sum of its children), stale group-fraction publishing, and the
+    vectorized fold all live in the base class now — this subclass only
+    keeps the legacy construction signature and attribute names."""
 
     def __init__(self, rows: List[RowSimulator], *, rows_per_rack: int = 2,
                  rack_budget_w: Optional[List[float]] = None,
                  cluster_budget_w: Optional[float] = None):
+        proto = PowerHierarchy.two_level(
+            [r.provisioned_w for r in rows], rows_per_rack=rows_per_rack,
+            rack_budget_w=rack_budget_w, cluster_budget_w=cluster_budget_w)
+        super().__init__(proto.parent, proto.node_budget_w, proto.n_leaves,
+                         proto.names)
         self.rows_per_rack = max(1, rows_per_rack)
-        self.n_racks = math.ceil(len(rows) / self.rows_per_rack)
-        self.rack_of = np.asarray([i // self.rows_per_rack for i in range(len(rows))])
-        self.row_budget_w = np.asarray([r.provisioned_w for r in rows], float)
-        if rack_budget_w is None:
-            rack_budget_w = [float(self.row_budget_w[self.rack_of == k].sum())
-                             for k in range(self.n_racks)]
-        self.rack_budget_w = np.asarray(rack_budget_w, float)
-        self.cluster_budget_w = float(cluster_budget_w
-                                      if cluster_budget_w is not None
-                                      else self.rack_budget_w.sum())
+        self.n_racks = len(self.leaf_parents)
+        self.rack_of = self.parent[:self.n_leaves] - self.n_leaves
+
+    # legacy attribute names (tests and external callers)
+    @property
+    def row_budget_w(self) -> np.ndarray:
+        return self.node_budget_w[:self.n_leaves]
+
+    @property
+    def rack_budget_w(self) -> np.ndarray:
+        return self.node_budget_w[self.leaf_parents]
+
+    @property
+    def cluster_budget_w(self) -> float:
+        return self.root_budget_w
 
     def publish_group_fracs(self, rows: List[RowSimulator], row_w: np.ndarray):
-        """Push rack/cluster power fractions into every row's telemetry."""
-        rack_w = np.zeros(self.n_racks)
-        np.add.at(rack_w, self.rack_of, row_w)
-        rack_frac = rack_w / self.rack_budget_w
-        cluster_frac = float(row_w.sum() / self.cluster_budget_w)
-        for i, r in enumerate(rows):
-            r.group_fracs = (float(rack_frac[self.rack_of[i]]), cluster_frac)
-        return rack_frac, cluster_frac
+        """Legacy-shaped publish: push ancestor fracs into every row (the
+        base-class :meth:`~repro.core.hierarchy.PowerHierarchy.publish`) and
+        return ``(rack_frac [K], cluster_frac)`` like the pre-hierarchy
+        code."""
+        frac = self.publish(rows, row_w)
+        return frac[self.leaf_parents], float(frac[self.root])
 
-    def fold(self, power: np.ndarray):
-        """[T, R] watts -> (row_frac [T,R], rack_frac [T,K], cluster_frac
-        [T]), each as fractions of the level's budget."""
-        row_frac = power / self.row_budget_w[None, :] if len(power) else power
-        rack_w = np.zeros((len(power), self.n_racks))
-        for k in range(self.n_racks):
-            rack_w[:, k] = power[:, self.rack_of == k].sum(axis=1)
-        rack_frac = rack_w / self.rack_budget_w[None, :] if len(power) else rack_w
-        cluster_frac = power.sum(axis=1) / self.cluster_budget_w
-        return row_frac, rack_frac, cluster_frac
+
+def resolve_row_hierarchy(rows: List[RowSimulator],
+                          hierarchy: Optional[PowerHierarchy], *,
+                          rows_per_rack: int = 2,
+                          rack_budget_w: Optional[List[float]] = None,
+                          cluster_budget_w: Optional[float] = None) -> PowerHierarchy:
+    """The budget tree a row-driving simulator runs under — shared by
+    :class:`ClusterSimulator` and the fleet driver. An explicit
+    ``hierarchy`` must match the row count and excludes the two-level
+    budget arguments (they would be silently ignored otherwise); without
+    one, the classic :class:`RackHierarchy` split is built from the rows."""
+    if hierarchy is not None:
+        if hierarchy.n_leaves != len(rows):
+            raise ValueError(f"hierarchy has {hierarchy.n_leaves} leaves "
+                             f"for {len(rows)} rows")
+        if rack_budget_w is not None or cluster_budget_w is not None:
+            raise ValueError(
+                "pass either an explicit hierarchy or rack_budget_w/"
+                "cluster_budget_w, not both — the hierarchy carries every "
+                "level's budget")
+        return hierarchy
+    return RackHierarchy(rows, rows_per_rack=rows_per_rack,
+                         rack_budget_w=rack_budget_w,
+                         cluster_budget_w=cluster_budget_w)
 
 
 class ClusterSimulator:
-    """Lockstep N rows under row/rack/cluster budgets.
+    """Lockstep N rows under a hierarchical power budget tree.
 
-    ``rack_budget_w``/``cluster_budget_w`` default to the sum of their
-    children's budgets (no extra oversubscription at the aggregation levels);
-    pass smaller values to model oversubscribed PDUs above the row.
+    With the default two-level tree, ``rack_budget_w``/``cluster_budget_w``
+    default to the sum of their children's budgets (no extra
+    oversubscription at the aggregation levels); pass smaller values to
+    model oversubscribed PDUs above the row, or pass an explicit
+    ``hierarchy`` (:class:`~repro.core.hierarchy.PowerHierarchy`) for
+    arbitrary-depth site topologies.
     """
 
     def __init__(self, rows: List[RowSimulator], *, rows_per_rack: int = 2,
                  rack_budget_w: Optional[List[float]] = None,
                  cluster_budget_w: Optional[float] = None,
-                 telemetry_s: Optional[float] = None):
+                 telemetry_s: Optional[float] = None,
+                 hierarchy: Optional[PowerHierarchy] = None):
         if not rows:
             raise ValueError("ClusterSimulator needs at least one row")
         self.rows = rows
-        self.hierarchy = RackHierarchy(rows, rows_per_rack=rows_per_rack,
-                                       rack_budget_w=rack_budget_w,
-                                       cluster_budget_w=cluster_budget_w)
+        self.hierarchy = resolve_row_hierarchy(
+            rows, hierarchy, rows_per_rack=rows_per_rack,
+            rack_budget_w=rack_budget_w, cluster_budget_w=cluster_budget_w)
         self.telemetry_s = float(telemetry_s or rows[0].cfg.telemetry_s)
 
     def _publish_group_fracs(self, row_w: np.ndarray):
-        return self.hierarchy.publish_group_fracs(self.rows, row_w)
+        return self.hierarchy.publish(self.rows, row_w)
 
     def run(self) -> ClusterResult:
         rows = self.rows
@@ -148,14 +184,18 @@ class ClusterSimulator:
         power = (np.stack(samples) if samples
                  else np.zeros((0, len(rows))))  # [T, R] watts
         power_t = np.asarray(ticks)
-        row_frac, rack_frac, cluster_frac = self.hierarchy.fold(power)
+        h = self.hierarchy
+        node_frac = h.fold(power)  # [T, N] fractions of each node's budget
+        cluster_frac = node_frac[:, h.root]
         return ClusterResult(
             row_results=row_results,
             power_t=power_t,
-            row_power_frac=row_frac,
-            rack_power_frac=rack_frac,
+            row_power_frac=node_frac[:, :h.n_leaves],
+            rack_power_frac=node_frac[:, h.leaf_parents],
             cluster_power_frac=cluster_frac,
             n_brakes=sum(rr.n_brakes for rr in row_results),
             peak_cluster_frac=float(cluster_frac.max()) if len(cluster_frac) else 0.0,
             mean_cluster_frac=float(cluster_frac.mean()) if len(cluster_frac) else 0.0,
+            node_power_frac=node_frac,
+            node_names=h.names,
         )

@@ -106,6 +106,25 @@ def row_trace(scenario: Scenario, workloads, shares, n_servers: int, *,
                              occupancy=occ, t_grid=t_grid, seed=seed)
 
 
+def row_budgets(scenario: Scenario, budget_w: Optional[float],
+                server) -> List[float]:
+    """Per-row budgets in watts (``budget_w=None`` resolves to the nominal
+    ``n_provisioned x server rating`` — the single copy of that rule).
+    ``FleetSpec.row_budget_fracs`` scales each row's share of the envelope
+    (heterogeneous PDU headroom)."""
+    fleet = scenario.fleet
+    base = (budget_w if budget_w is not None
+            else fleet.n_provisioned * server.provisioned_w)
+    fracs = fleet.row_budget_fracs
+    if fracs is None:
+        return [float(base)] * fleet.n_rows
+    if len(fracs) != fleet.n_rows:
+        raise ValueError(
+            f"row_budget_fracs has {len(fracs)} entries for "
+            f"{fleet.n_rows} rows")
+    return [float(base) * float(f) for f in fracs]
+
+
 def row_sim(scenario: Scenario, workloads, shares, server,
             budget_w: Optional[float], policy, reqs: List[Request], *,
             row_index: int = 0) -> RowSimulator:
@@ -234,6 +253,16 @@ def _run_cluster(scenario: Scenario, wls, shares, server,
                  budget_w: Optional[float], policy_factory) -> ExperimentResult:
     fleet = scenario.fleet
     n = fleet.n_servers
+    hspec = scenario.hierarchy
+    hierarchy = None
+    per_row_budget = [budget_w] * fleet.n_rows
+    if hspec is not None:
+        # planner-shaped budget tree: interior derates propagate down to the
+        # per-row budgets (the tree stays conservative), exactly as on the
+        # routed-fleet path — base budgets resolved by the same
+        # row_budgets rule
+        hierarchy = hspec.build(row_budgets(scenario, budget_w, server))
+        per_row_budget = [float(b) for b in hierarchy.leaf_budget_w]
     rows = []
     traces = []
     for i in range(fleet.n_rows):
@@ -241,10 +270,11 @@ def _run_cluster(scenario: Scenario, wls, shares, server,
         # occupancy generator controls cross-row correlation structure)
         reqs = row_trace(scenario, wls, shares, n, seed=scenario.seed + i, row=i)
         traces.append(reqs)
-        rows.append(row_sim(scenario, wls, shares, server, budget_w,
+        rows.append(row_sim(scenario, wls, shares, server, per_row_budget[i],
                             policy_factory(), reqs, row_index=i))
     cres = ClusterSimulator(rows, rows_per_rack=fleet.rows_per_rack,
-                            telemetry_s=scenario.telemetry.telemetry_s).run()
+                            telemetry_s=scenario.telemetry.telemetry_s,
+                            hierarchy=hierarchy).run()
     if scenario.compare_to_reference:
         # per-row uncapped references on the same traces, merged cluster-wide
         stats = LatencyStats()

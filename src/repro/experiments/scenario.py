@@ -16,8 +16,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.policy import NoCap, OneThreshold, PolcaPolicy, PredictivePolcaPolicy
 from repro.core.power_model import A100, TPU_V5E, DevicePower, ServerPower
@@ -109,6 +110,40 @@ class RoutingSpec:
 
 
 @dataclass(frozen=True)
+class HierarchySpec:
+    """A serializable arbitrary-depth power-budget tree over a fleet's rows
+    (built into a :class:`~repro.core.hierarchy.PowerHierarchy` at run
+    time). ``shape`` lists the fan-out per interior level root-down —
+    ``(2, 2, 3)`` is a site with 2 PDU sets x 2 racks x 3 rows = 12 rows
+    (``prod(shape)`` must equal ``FleetSpec.n_rows``). ``level_names``
+    labels the interior levels root-down (defaults to site/pdu/rack...).
+    ``budget_fracs`` derates interior nodes by root-down path (``"0/1"`` =
+    the second rack of the first PDU set); a derate multiplies every
+    descendant row's budget, so planner-shaped budgets stay conservative —
+    each node's budget is exactly the sum of its children's. A Scenario
+    carrying a HierarchySpec runs its fleet (or cluster) under this tree
+    instead of the default two-level ``rows_per_rack`` split; with a
+    ``ControllerSpec(scope="tree")`` the rebalancing controller re-divides
+    budgets recursively at every interior node."""
+
+    shape: Tuple[int, ...] = (2, 2)
+    level_names: Optional[Tuple[str, ...]] = None
+    budget_fracs: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def n_rows(self) -> int:
+        return int(math.prod(self.shape))
+
+    def build(self, row_budget_w: Sequence[float]):
+        """The live :class:`~repro.core.hierarchy.PowerHierarchy` for these
+        per-row base budgets (derates applied, interior sums filled in)."""
+        from repro.core.hierarchy import PowerHierarchy
+        return PowerHierarchy.from_shape(
+            self.shape, row_budget_w, level_names=self.level_names,
+            budget_fracs=self.budget_fracs)
+
+
+@dataclass(frozen=True)
 class ControllerSpec:
     """Fleet-level power-rebalancing configuration. ``kind`` names a
     rebalance policy in the ``repro.fleet.controller`` registry (``static``
@@ -116,7 +151,12 @@ class ControllerSpec:
     ``proportional`` — envelope split by measured row power; ``predictive``
     — split by the 40 s OOB-horizon power forecast); ``params`` pass to the
     policy builder verbatim. The controller re-divides the fixed ``scope``
-    envelope ("rack" or "cluster") every ``interval_s``, stepping
+    envelope every ``interval_s`` — ``"rack"``: each leaf-parent's rows
+    share that rack's envelope; ``"cluster"``: all rows share the root
+    envelope as one flat pool; ``"tree"``: the policy runs recursively at
+    every interior node of the scenario's budget hierarchy (the site
+    re-divides across PDU sets, PDU sets across racks, racks across rows;
+    only the root envelope is frozen) — stepping
     ``alpha`` of the way to the target and never dropping a row below
     ``min_share`` of its group's equal split. A Scenario carrying a
     ControllerSpec (and a RoutingSpec — the controller rides the fleet
@@ -166,6 +206,9 @@ class Scenario:
     # fleet-level dynamic power rebalancing (requires routing; None = static
     # per-row budgets, exactly the pre-controller behavior)
     controller: Optional[ControllerSpec] = None
+    # the power-budget tree over the rows (None = the classic two-level
+    # rows_per_rack split, exactly the pre-hierarchy behavior)
+    hierarchy: Optional[HierarchySpec] = None
 
     def with_(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
@@ -195,6 +238,14 @@ class Scenario:
         return self.with_(controller=dataclasses.replace(
             prev, kind=kind, params=params, **spec_kw))
 
+    def with_hierarchy(self, shape: Tuple[int, ...], **kw) -> "Scenario":
+        """Same scenario under an explicit budget tree (and a fleet sized to
+        match: ``n_rows`` is set to ``prod(shape)``). Keyword args pass to
+        :class:`HierarchySpec` (``level_names``, ``budget_fracs``)."""
+        spec = HierarchySpec(shape=tuple(shape), **kw)
+        return (self.with_(hierarchy=spec)
+                .with_fleet(n_rows=spec.n_rows))
+
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -214,6 +265,12 @@ class Scenario:
             d["routing"] = RoutingSpec(**d["routing"])
         if d.get("controller") is not None:
             d["controller"] = ControllerSpec(**d["controller"])
+        if d.get("hierarchy") is not None:
+            h = dict(d["hierarchy"])
+            h["shape"] = tuple(h.get("shape", ()))
+            if h.get("level_names") is not None:
+                h["level_names"] = tuple(h["level_names"])
+            d["hierarchy"] = HierarchySpec(**h)
         return cls(**d)
 
     def to_json(self) -> str:
@@ -363,3 +420,48 @@ register_scenario(_REBALANCE_BASE.with_controller("predictive")
 register_scenario(_REBALANCE_BASE.with_controller("predictive")
                   .with_routing("forecast-aware")
                   .with_(name="fleet-rebalance-forecast-router"))
+
+# The routed-fleet scenario family (one trace + envelope, router swapped):
+# the set the provisioning planner sweeps in benchmarks/capacity_planning.py
+# ("how far does the envelope stretch under each dispatch policy").
+FLEET_SCENARIO_FAMILY: List[str] = [
+    "fleet-round-robin",
+    "fleet-jsq",
+    "fleet-power-headroom",
+    "fleet-cap-aware",
+    "fleet-rr-shed",
+]
+
+# Site-scale hierarchy scenarios (repro.core.hierarchy): a 12-row site — 2
+# PDU sets x 2 racks x 3 rows — whose second rack (path "0/1") sits on a
+# 30%-derated PDU, under the same stressed traffic as the fleet-rebalance
+# family. The derate is *planner-shaped*: it propagates down to the rack's
+# three row budgets (the tree stays conservative), so every row of that rack
+# powerbrakes under load while the sibling rack and the entire second PDU
+# set hold slack a flat per-row (or per-rack) rebalance can never reach —
+# rack-scope rebalancing is structurally useless here (all three siblings
+# are equally starved). Only the tree-scope controller, re-dividing the site
+# envelope across PDU sets and racks recursively, moves that headroom to
+# where the demand is. Variants differ ONLY in the ControllerSpec.
+_SITE_BASE = Scenario(
+    name="site-static",
+    duration_s=DAY / 4,
+    fleet=FleetSpec(n_provisioned=20, added_frac=0.05, n_rows=12),
+    policy=PolicySpec("polca"),
+    traffic=TrafficSpec(occ_peak=0.70, gen_params={"trough": 0.62}),
+    routing=RoutingSpec("cap-aware"),
+    controller=ControllerSpec("static"),
+    hierarchy=HierarchySpec(shape=(2, 2, 3), budget_fracs={"0/1": 0.7}),
+    budget="calibrated",
+)
+register_scenario(_SITE_BASE)
+register_scenario(_SITE_BASE.with_controller("predictive", scope="rack")
+                  .with_(name="site-rack-predictive"))
+register_scenario(_SITE_BASE.with_controller("predictive", scope="tree")
+                  .with_(name="site-tree-predictive"))
+
+SITE_SCENARIO_FAMILY: List[str] = [
+    "site-static",
+    "site-rack-predictive",
+    "site-tree-predictive",
+]

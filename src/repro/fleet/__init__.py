@@ -52,6 +52,7 @@ from repro.fleet.router import (
     Router,
     RowView,
     ShedLowPriority,
+    ShedTokenBudget,
     build_admission,
     build_router,
 )
@@ -82,6 +83,7 @@ __all__ = [
     "RoutingDecision",
     "RowView",
     "ShedLowPriority",
+    "ShedTokenBudget",
     "StaticBudgetPolicy",
     "as_sim_result",
     "attribute_routing",

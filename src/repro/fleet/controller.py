@@ -5,11 +5,14 @@ scenarios one row runs against a 30%-smaller envelope while its neighbors
 hold slack they never use, so the derated row powerbrakes at load points the
 rack as a whole could absorb. :class:`FleetController` closes that gap — it
 runs on the same telemetry-grid lockstep as the rack managers and
-periodically re-divides the *fixed* rack (or cluster) power envelope across
-rows, so each row's budget tracks where demand actually is. Conservation is
-structural: every rebalance re-normalizes the new budgets to the scope
-envelope held by the shared :class:`~repro.experiments.cluster.RackHierarchy`
-and asserts the sums match (tier-1-asserted every rebalance tick).
+periodically re-divides a *fixed* power envelope across the budget tree
+(:class:`~repro.core.hierarchy.PowerHierarchy`): per rack, per cluster, or —
+``scope="tree"`` — recursively at every interior node, so a site re-divides
+across PDU sets, PDU sets across racks, and racks across rows, reaching
+headroom stranded on a sibling *rack*, not just a sibling row. Conservation
+is structural: every division re-normalizes the new budgets to its node's
+envelope and asserts the sums match (tier-1-asserted every rebalance tick,
+per node).
 
 Rebalance policies are registered by name so
 :class:`~repro.experiments.scenario.ControllerSpec` stays JSON-serializable:
@@ -51,17 +54,23 @@ CONSERVATION_ATOL = 1e-6  # watts; rebalances re-normalize exactly
 class RebalanceEvent:
     """One applied rebalance: when, and the per-row budgets before/after.
     ``demand_w`` is the signal the policy split the envelope by (measured or
-    forecast row power). Carried in ``FleetResult.rebalances`` so budget
-    motion is auditable next to the power series."""
+    forecast row power). Under ``scope="tree"`` the full per-node budget
+    vectors (leaves first, root last — see
+    :class:`~repro.core.hierarchy.PowerHierarchy`) are carried too, so
+    interior budget motion (a site re-dividing across racks) is auditable
+    next to the power series; they are ``None`` for the flat scopes.
+    Carried in ``FleetResult.rebalances``."""
 
     t: float
     budgets_before_w: np.ndarray  # [R]
     budgets_after_w: np.ndarray  # [R]
     demand_w: np.ndarray  # [R]
     policy: str
+    node_budgets_before_w: Optional[np.ndarray] = None  # [N] (tree scope)
+    node_budgets_after_w: Optional[np.ndarray] = None  # [N] (tree scope)
 
     def moved_w(self) -> float:
-        """Total watts that changed hands (half the L1 budget delta)."""
+        """Total watts that changed hands between rows (half the L1 delta)."""
         return float(np.abs(self.budgets_after_w - self.budgets_before_w).sum() / 2.0)
 
 
@@ -176,26 +185,41 @@ class PredictiveRebalancePolicy(RebalancePolicy):
 
 
 class FleetController:
-    """Periodically re-divide the rack/cluster envelope across row budgets.
+    """Periodically re-divide a power envelope across the budget hierarchy.
 
-    Bound to a :class:`~repro.experiments.cluster.RackHierarchy` by the
-    fleet driver; every ``interval_s`` it asks the policy for target budgets
-    per scope group (``scope="rack"``: each rack's rows share that rack's
-    envelope; ``scope="cluster"``: all rows share the cluster envelope),
-    floors them at ``min_share`` of the group's equal split (a starved row
-    still draws idle power — a zero budget would powerbrake it instantly),
-    low-passes the step with ``alpha`` (full jumps oscillate against the
-    40 s actuation delay, the same failure mode strict cap-avoidance routing
-    has), re-normalizes exactly to the envelope, and applies the result to
-    ``RowSimulator.provisioned_w``. Conservation — group sums equal to the
-    fixed envelope — is asserted on every applied rebalance.
+    Bound to a :class:`~repro.core.hierarchy.PowerHierarchy` by the fleet
+    driver; every ``interval_s`` it asks the policy for target budgets and
+    applies the floored, low-passed, exactly-re-normalized result. Three
+    scopes:
+
+    * ``scope="rack"`` — each leaf-parent ("rack") node's rows share that
+      node's frozen envelope (the classic per-rack rebalance);
+    * ``scope="cluster"`` — all rows share the root envelope in one flat
+      pool, ignoring interior budgets;
+    * ``scope="tree"`` — the policy runs **recursively at every interior
+      node**, top-down: the site re-divides its envelope across PDU sets,
+      each PDU set across its racks, each rack across its rows — so
+      headroom stranded on a sibling *rack* (not just a sibling row) flows
+      to where demand is. Only the root envelope is frozen; interior node
+      budgets move (committed back into ``hierarchy.node_budget_w``, so
+      published group fractions track the budgets in force). A node's
+      demand is the sum of its descendant rows' demand.
+
+    Every division floors children at ``min_share`` of the node's equal
+    split (a starved row still draws idle power — a zero budget would
+    powerbrake it instantly), low-passes the step with ``alpha`` (full jumps
+    oscillate against the 40 s actuation delay, the same failure mode strict
+    cap-avoidance routing has), and re-normalizes exactly to the node's
+    envelope. Conservation — children sums equal to each node's envelope —
+    is asserted on every applied rebalance, per node.
     """
 
     def __init__(self, policy: RebalancePolicy, *, interval_s: float = 60.0,
                  scope: str = "rack", alpha: float = 0.5,
                  min_share: float = 0.5, deadband_w: float = 1.0):
-        if scope not in ("rack", "cluster"):
-            raise ValueError(f"scope must be 'rack' or 'cluster', got {scope!r}")
+        if scope not in ("rack", "cluster", "tree"):
+            raise ValueError(
+                f"scope must be 'rack', 'cluster', or 'tree', got {scope!r}")
         if not 0.0 < alpha <= 1.0:
             raise ValueError(f"alpha must be in (0, 1], got {alpha}")
         if not 0.0 < min_share < 1.0:
@@ -219,21 +243,85 @@ class FleetController:
         return self.policy.needs_forecast
 
     def bind(self, hierarchy) -> None:
-        """Attach the fleet's budget hierarchy (called by FleetSimulator).
-        The scope envelopes are frozen here, from the *initial* budgets —
-        rebalancing moves watts inside the envelope, never grows it.
-        Binding resets the controller's schedule and event log, so one
-        controller instance reused across fleets starts each run fresh."""
+        """Attach the fleet's budget hierarchy (a
+        :class:`~repro.core.hierarchy.PowerHierarchy`; called by
+        FleetSimulator). The scope envelopes are frozen here, from the
+        *initial* budgets — rebalancing moves watts inside the envelope,
+        never grows it (under ``scope="tree"`` only the *root* envelope is
+        frozen; interior envelopes are re-divided recursively). Binding
+        resets the controller's schedule and event log, so one controller
+        instance reused across fleets starts each run fresh."""
         self._next_t = None
         self.events = []
         self._hierarchy = hierarchy
         if self.scope == "rack":
-            self._groups = [np.flatnonzero(hierarchy.rack_of == k)
-                            for k in range(hierarchy.n_racks)]
-            self._envelopes = [float(b) for b in hierarchy.rack_budget_w]
+            self._groups = [hierarchy.subtree_leaves(p)
+                            for p in hierarchy.leaf_parents]
+            self._envelopes = [float(hierarchy.node_budget_w[p])
+                               for p in hierarchy.leaf_parents]
+        elif self.scope == "cluster":
+            self._groups = [np.arange(hierarchy.n_leaves)]
+            self._envelopes = [hierarchy.root_budget_w]
+        else:  # tree: recursion walks the hierarchy itself
+            self._groups = []
+            self._envelopes = []
+
+    def _settle(self, target: np.ndarray, before_g: np.ndarray,
+                envelope: float) -> np.ndarray:
+        """Floor, low-pass, and exactly re-normalize one division of
+        ``envelope`` across a sibling group (rows of a rack, racks of a PDU
+        set, ...). Conservation against the envelope is asserted here, so
+        every node division in every scope is checked."""
+        n = len(before_g)
+        floor = self.min_share * envelope / n
+        stepped = before_g + self.alpha * (np.maximum(target, floor)
+                                           - before_g)
+        stepped = np.maximum(stepped, floor)
+        # exact conservation: scale the above-floor slack to the envelope
+        slack = stepped - floor
+        total_slack = float(slack.sum())
+        budget_slack = envelope - floor * n
+        if total_slack > 0.0:
+            new = floor + slack * (budget_slack / total_slack)
         else:
-            self._groups = [np.arange(len(hierarchy.rack_of))]
-            self._envelopes = [hierarchy.cluster_budget_w]
+            new = np.full(n, envelope / n)
+        assert abs(float(new.sum()) - envelope) <= CONSERVATION_ATOL, \
+            (f"rebalance broke conservation: group sum "
+             f"{float(new.sum()):.6f} != envelope {envelope:.6f}")
+        return new
+
+    def _tree_divide(self, demand_leaf: np.ndarray,
+                     before_leaf: np.ndarray) -> Optional[np.ndarray]:
+        """One recursive top-down pass over every interior node: each node
+        re-divides its envelope across its children, the root's envelope
+        frozen, every child's new budget becoming the envelope its own
+        division runs under. Returns the full ``[N]`` post-pass node budget
+        vector, or None when the policy declined to move anything."""
+        h = self._hierarchy
+        node_demand = h.node_w(demand_leaf)
+        cur = h.node_budget_w.copy()
+        cur[:h.n_leaves] = before_leaf
+        node_after = cur.copy()
+        any_target = False
+        # parents always carry higher indices than their children, so a
+        # descending walk over the interior nodes is exactly top-down
+        for i in range(h.n_nodes - 1, h.n_leaves - 1, -1):
+            kids = h.children[i]
+            envelope = float(node_after[i])
+            if len(kids) < 2:
+                node_after[kids] = envelope  # an only child inherits it all
+                continue
+            target = self.policy.target_budgets(node_demand[kids], cur[kids],
+                                                envelope)
+            if target is not None:
+                any_target = True
+            elif envelope == float(cur[kids].sum()):
+                continue  # nothing moved here or above: keep shares exactly
+            else:
+                target = cur[kids]  # rescale shares to the moved envelope
+            node_after[kids] = self._settle(np.asarray(target, float),
+                                            cur[kids], envelope)
+        return node_after if any_target else None
 
     def maybe_rebalance(self, t: float, rows, row_w: np.ndarray,
                         forecast_w: Optional[np.ndarray]) -> Optional[RebalanceEvent]:
@@ -249,38 +337,43 @@ class FleetController:
         self._next_t += self.interval_s
         demand = forecast_w if (self.policy.needs_forecast
                                 and forecast_w is not None) else row_w
+        h = self._hierarchy
         before = np.asarray([r.provisioned_w for r in rows], float)
-        after = before.copy()
-        for idx, envelope in zip(self._groups, self._envelopes):
-            if len(idx) < 2:
-                continue  # a one-row group has nothing to trade
-            target = self.policy.target_budgets(demand[idx], before[idx], envelope)
-            if target is None:
-                continue
-            floor = self.min_share * envelope / len(idx)
-            stepped = before[idx] + self.alpha * (np.maximum(target, floor)
-                                                  - before[idx])
-            stepped = np.maximum(stepped, floor)
-            # exact conservation: scale the above-floor slack to the envelope
-            slack = stepped - floor
-            total_slack = float(slack.sum())
-            budget_slack = envelope - floor * len(idx)
-            if total_slack > 0.0:
-                after[idx] = floor + slack * (budget_slack / total_slack)
-            else:
-                after[idx] = envelope / len(idx)
-            assert abs(float(after[idx].sum()) - envelope) <= CONSERVATION_ATOL, \
-                (f"rebalance broke conservation: group sum "
-                 f"{float(after[idx].sum()):.6f} != envelope {envelope:.6f}")
+        node_before = node_after = None
+        if self.scope == "tree":
+            node_after = self._tree_divide(demand, before)
+            if node_after is None:
+                return None
+            node_before = h.node_budget_w.copy()
+            node_before[:h.n_leaves] = before
+            after = node_after[:h.n_leaves].copy()
+        else:
+            after = before.copy()
+            for idx, envelope in zip(self._groups, self._envelopes):
+                if len(idx) < 2:
+                    continue  # a one-row group has nothing to trade
+                target = self.policy.target_budgets(demand[idx], before[idx],
+                                                    envelope)
+                if target is None:
+                    continue
+                after[idx] = self._settle(target, before[idx], envelope)
         moved_w = float(np.abs(after - before).sum()) / 2.0
         if moved_w <= self.deadband_w:
             return None
         for r, b in zip(rows, after):
             if b != r.provisioned_w:
                 r.set_budget(float(b), t)
+        # commit the new budgets into the hierarchy so published group
+        # fractions (and the next pass) see the budgets actually in force
+        if node_after is not None:
+            h.node_budget_w[:] = node_after
+        else:
+            h.node_budget_w[:h.n_leaves] = after
         ev = RebalanceEvent(t=t, budgets_before_w=before, budgets_after_w=after,
                             demand_w=np.asarray(demand, float).copy(),
-                            policy=self.policy.name)
+                            policy=self.policy.name,
+                            node_budgets_before_w=node_before,
+                            node_budgets_after_w=node_after)
         self.events.append(ev)
         return ev
 

@@ -30,8 +30,13 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.hierarchy import PowerHierarchy
 from repro.core.simulator import Request, RowSimulator, SimConfig, SimResult
 from repro.core.slo import LatencyStats
+# row_budgets lives with the other budget-resolution rules in the
+# experiments layer; re-exported here because fleet callers reach for it
+# next to build_fleet
+from repro.experiments.runner import row_budgets  # noqa: F401
 from repro.fleet.controller import FleetController, PowerForecaster, RebalanceEvent
 from repro.fleet.router import (
     AdmissionController,
@@ -79,6 +84,13 @@ class FleetResult:
     # applied rebalance events (fleet.controller.RebalanceEvent)
     row_budget_w: np.ndarray = field(default=None, repr=False)  # [T, R]
     rebalances: List[RebalanceEvent] = field(default_factory=list, repr=False)
+    # full budget-tree telemetry (leaves first, root last; see
+    # core.hierarchy.PowerHierarchy): per-node power fractions and the
+    # per-tick node budgets they were measured against. rack_power_frac /
+    # cluster_power_frac above are the leaf-parent / root slices of this.
+    node_power_frac: np.ndarray = field(default=None, repr=False)  # [T, N]
+    node_budget_w: np.ndarray = field(default=None, repr=False)  # [T, N]
+    node_names: tuple = ()
 
     @property
     def n_rebalances(self) -> int:
@@ -139,8 +151,11 @@ class FleetSimulator:
 
     ``rows`` must be constructed with empty request lists (arrivals come from
     the dispatcher); ``requests`` must be sorted by arrival time (the trace
-    generators emit them sorted). Rack/cluster budgets default to the sum of
-    their children's budgets, exactly like :class:`ClusterSimulator`.
+    generators emit them sorted). Budgets above the row default to the sum of
+    their children's budgets, exactly like :class:`ClusterSimulator`; pass an
+    explicit ``hierarchy`` (:class:`~repro.core.hierarchy.PowerHierarchy`)
+    for arbitrary-depth site topologies — the default is the classic
+    two-level row -> rack -> cluster split.
     """
 
     def __init__(self, rows: List[RowSimulator], requests: List[Request],
@@ -149,17 +164,18 @@ class FleetSimulator:
                  rack_budget_w: Optional[List[float]] = None,
                  cluster_budget_w: Optional[float] = None,
                  telemetry_s: Optional[float] = None,
-                 controller: Optional[FleetController] = None):
+                 controller: Optional[FleetController] = None,
+                 hierarchy: Optional[PowerHierarchy] = None):
         if not rows:
             raise ValueError("FleetSimulator needs at least one row")
-        from repro.experiments.cluster import RackHierarchy
+        from repro.experiments.cluster import resolve_row_hierarchy
         self.rows = rows
         self.requests = requests
         self.router = router
         self.admission = admission if admission is not None else AdmitAll()
-        self.hierarchy = RackHierarchy(rows, rows_per_rack=rows_per_rack,
-                                       rack_budget_w=rack_budget_w,
-                                       cluster_budget_w=cluster_budget_w)
+        self.hierarchy = resolve_row_hierarchy(
+            rows, hierarchy, rows_per_rack=rows_per_rack,
+            rack_budget_w=rack_budget_w, cluster_budget_w=cluster_budget_w)
         self.telemetry_s = float(telemetry_s or rows[0].cfg.telemetry_s)
         self.duration = max(r.duration for r in rows)
         self.controller = controller
@@ -185,6 +201,7 @@ class FleetSimulator:
         self._ticks: List[float] = []
         self._samples: List[np.ndarray] = []
         self._budget_samples: List[np.ndarray] = []
+        self._interior_budget_samples: List[np.ndarray] = []
         self._shed_cum: List[int] = []
         # index-only placeholder views for routers with needs_views=False
         self._blind_views = [
@@ -201,8 +218,8 @@ class FleetSimulator:
             r.advance_to(min(t, r.duration))
 
     def _publish_group_fracs(self, row_w: np.ndarray):
-        _, cluster_frac = self.hierarchy.publish_group_fracs(self.rows, row_w)
-        self._stale_cluster_frac = cluster_frac
+        frac = self.hierarchy.publish(self.rows, row_w)
+        self._stale_cluster_frac = float(frac[self.hierarchy.root])
 
     def _view(self, i: int, req: Request) -> RowView:
         row = self.rows[i]
@@ -285,6 +302,10 @@ class FleetSimulator:
                 self._ticks.append(self._next_tick)
                 self._samples.append(row_w)
                 self._budget_samples.append(budgets)
+                # interior node budgets in force this tick (the tree-scope
+                # controller re-divides these; static otherwise)
+                self._interior_budget_samples.append(
+                    self.hierarchy.node_budget_w[self.hierarchy.n_leaves:].copy())
                 self._shed_cum.append(sum(self.n_shed.values()))
                 fc_w = None
                 if self._forecaster is not None:
@@ -311,15 +332,24 @@ class FleetSimulator:
         for r in self.rows:  # drain events between the last tick and duration
             r.advance_to(r.duration)
         row_results = [r.finalize() for r in self.rows]
+        h = self.hierarchy
         power = (np.stack(self._samples) if self._samples
                  else np.zeros((0, len(self.rows))))  # [T, R] watts
         budgets = (np.stack(self._budget_samples) if self._budget_samples
                    else np.zeros((0, len(self.rows))))  # [T, R] watts
+        interior = (np.stack(self._interior_budget_samples)
+                    if self._interior_budget_samples
+                    else np.zeros((0, h.n_nodes - h.n_leaves)))
         power_t = np.asarray(self._ticks)
-        _, rack_frac, cluster_frac = self.hierarchy.fold(power)
-        # row fractions against the budgets actually in force at each tick
-        # (identical to the hierarchy's static fold when no budget ever moved)
-        row_frac = power / budgets if len(power) else power
+        # every node fraction is measured against the budget actually in
+        # force at that tick: per-row budgets move under any rebalancing
+        # controller, interior budgets only under scope="tree" (identical to
+        # the static fold when nothing ever moved)
+        node_budget = np.concatenate([budgets, interior], axis=1)  # [T, N]
+        node_frac = h.fold(power, node_budget_w=node_budget)
+        rack_frac = node_frac[:, h.leaf_parents]
+        cluster_frac = node_frac[:, h.root]
+        row_frac = node_frac[:, :h.n_leaves]
         return FleetResult(
             row_results=row_results,
             decisions=self.decisions,
@@ -337,6 +367,9 @@ class FleetSimulator:
             row_budget_w=budgets,
             rebalances=(list(self.controller.events)
                         if self.controller is not None else []),
+            node_power_frac=node_frac,
+            node_budget_w=node_budget,
+            node_names=h.names,
         )
 
     def run(self) -> FleetResult:
@@ -363,23 +396,6 @@ def fleet_trace(scenario, workloads, shares) -> List[Request]:
     return row_trace(scenario, workloads, shares, n_total, seed=scenario.seed)
 
 
-def row_budgets(scenario, budget_w: Optional[float], server) -> List[Optional[float]]:
-    """Per-row budgets in watts. ``FleetSpec.row_budget_fracs`` scales each
-    row's share of the envelope (heterogeneous PDU headroom); None entries
-    keep the RowSimulator nominal default."""
-    fleet = scenario.fleet
-    fracs = fleet.row_budget_fracs
-    if fracs is None:
-        return [budget_w] * fleet.n_rows
-    if len(fracs) != fleet.n_rows:
-        raise ValueError(
-            f"row_budget_fracs has {len(fracs)} entries for "
-            f"{fleet.n_rows} rows")
-    base = (budget_w if budget_w is not None
-            else fleet.n_provisioned * server.provisioned_w)
-    return [float(base) * float(f) for f in fracs]
-
-
 def build_fleet(scenario, workloads, shares, server,
                 budget_w: Optional[float], policy_factory,
                 requests: List[Request], *, reference: bool = False) -> FleetSimulator:
@@ -387,14 +403,18 @@ def build_fleet(scenario, workloads, shares, server,
 
     A scenario carrying a :class:`~repro.experiments.scenario.ControllerSpec`
     additionally gets a :class:`~repro.fleet.controller.FleetController`
-    rebalancing row budgets on the telemetry grid.
+    rebalancing row budgets on the telemetry grid; one carrying a
+    :class:`~repro.experiments.scenario.HierarchySpec` runs under that
+    arbitrary-depth budget tree (interior derates propagate down to the row
+    budgets, keeping the tree conservative) instead of the default two-level
+    rack split.
 
     ``reference=True`` builds the uncapped twin: NoCap policies on
     effectively-infinite row budgets, same router and admission spec (no
     emergency ever triggers, so nothing is shed) — the paper's
     capping-impact-only baseline, fleet-shaped. References never carry a
-    controller: with nothing capped there is no headroom to move, and the
-    baseline must isolate power-management impact.
+    controller or a shaped hierarchy: with nothing capped there is no
+    headroom to move, and the baseline must isolate power-management impact.
     """
     from repro.core.policy import NoCap
     from repro.experiments.runner import row_sim
@@ -405,8 +425,10 @@ def build_fleet(scenario, workloads, shares, server,
     if spec is None:
         raise ValueError(f"scenario {scenario.name!r} has no RoutingSpec")
     fleet = scenario.fleet
+    hspec = getattr(scenario, "hierarchy", None)
     n = fleet.n_servers
     rows = []
+    hierarchy = None
     if reference:
         for i in range(fleet.n_rows):
             rows.append(RowSimulator(
@@ -415,6 +437,11 @@ def build_fleet(scenario, workloads, shares, server,
                 duration=scenario.duration_s, row_index=i))
     else:
         budgets = row_budgets(scenario, budget_w, server)
+        if hspec is not None:
+            # shape the per-row base budgets through the tree: derated
+            # interior nodes shrink their rows' budgets
+            hierarchy = hspec.build(budgets)
+            budgets = [float(b) for b in hierarchy.leaf_budget_w]
         for i in range(fleet.n_rows):
             rows.append(row_sim(scenario, workloads, shares, server,
                                 budgets[i], policy_factory(), [], row_index=i))
@@ -427,4 +454,5 @@ def build_fleet(scenario, workloads, shares, server,
         admission=build_admission(spec.admission, spec.admission_params),
         rows_per_rack=fleet.rows_per_rack,
         telemetry_s=scenario.telemetry.telemetry_s,
-        controller=controller)
+        controller=controller,
+        hierarchy=hierarchy)

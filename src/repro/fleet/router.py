@@ -9,7 +9,9 @@ through the 40 s out-of-band path). An :class:`AdmissionController` decides
 first whether the request runs at all: under a power emergency (cluster power
 near the envelope, or any row powerbraked) low-priority work is shed instead
 of queued, trading LP goodput for HP latency — the POLCA priority contract
-applied at the fleet door rather than per-server.
+applied at the fleet door rather than per-server. ``shed-lp`` sheds the
+whole LP stream for the duration; ``shed-tokens`` meters the shedding to a
+configured token relief rate (non-boolean shedding, same LP-first ordering).
 
 Routers and admission controllers are registered by name so
 :class:`~repro.experiments.scenario.RoutingSpec` stays JSON-serializable:
@@ -27,7 +29,7 @@ Routers and admission controllers are registered by name so
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.simulator import Request
@@ -268,6 +270,59 @@ class ShedLowPriority(AdmissionController):
         return not emergency
 
 
+@dataclass
+class ShedTokenBudget(AdmissionController):
+    """Token-budget shedding: meter *how much* work is shed instead of
+    shedding everything low-priority (``shed-lp``'s boolean contract).
+
+    While a power emergency holds — same trigger as ``shed-lp``: cluster
+    power at/above ``shed_above`` of the envelope, or any row powerbraked —
+    the controller accrues a token *debt* at ``relief_tokens_per_s`` (plus a
+    ``burst_tokens`` down payment when the emergency window opens, so relief
+    starts immediately) and sheds arriving requests while the debt is
+    positive, debiting each shed request's ``out_tokens`` — overshoot banks
+    as signed credit, so one large shed buys admission for the arrivals
+    after it. Load beyond the configured relief rate is admitted even
+    mid-emergency — the non-boolean upgrade: the shed stream tracks
+    ``relief_tokens_per_s`` instead of swallowing the whole LP stream.
+    Ordering is shared with ``shed-lp``: LP is shed
+    first and HP is never shed (the POLCA priority contract); the debt is
+    capped at ``max_debt_tokens`` so a long emergency cannot bank unbounded
+    shedding against the recovery, and it resets the moment the emergency
+    clears."""
+
+    shed_above: float = 0.97
+    shed_when_braked: bool = True
+    relief_tokens_per_s: float = 1500.0  # shed rate the emergency demands
+    burst_tokens: float = 4000.0  # immediate relief when the window opens
+    max_debt_tokens: float = 20000.0
+    name: str = "shed-tokens"
+    _debt: float = field(default=0.0, repr=False)
+    _last_t: Optional[float] = field(default=None, repr=False)
+
+    def admit(self, req: Request, fleet: FleetView) -> bool:
+        emergency = (fleet.cluster_frac >= self.shed_above
+                     or (self.shed_when_braked and fleet.n_braked > 0))
+        if emergency:
+            if self._last_t is None:  # window opens: immediate down payment
+                self._debt = min(self.max_debt_tokens, self._debt
+                                 + self.burst_tokens)
+            else:
+                self._debt = min(self.max_debt_tokens, self._debt
+                                 + (fleet.t - self._last_t)
+                                 * self.relief_tokens_per_s)
+            self._last_t = fleet.t
+        else:
+            self._debt = 0.0
+            self._last_t = None
+        if req.priority == "high":
+            return True  # LP-first, and LP always covers: HP is never shed
+        if emergency and self._debt > 0.0:
+            self._debt -= float(req.out_tokens)  # overshoot banks as credit
+            return False
+        return True
+
+
 # ---------------------------------------------------------------------------
 # registries (RoutingSpec round-trips through these by name)
 # ---------------------------------------------------------------------------
@@ -283,6 +338,7 @@ ROUTER_BUILDERS: Dict[str, Callable[..., Router]] = {
 ADMISSION_BUILDERS: Dict[str, Callable[..., AdmissionController]] = {
     "admit-all": AdmitAll,
     "shed-lp": ShedLowPriority,
+    "shed-tokens": ShedTokenBudget,
 }
 
 

@@ -30,11 +30,12 @@ Scenario registry on import.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.hierarchy import PowerHierarchy
 from repro.core.traces import DAY, occupancy_curve, register_occupancy_generator
 from repro.experiments.scenario import (
     FleetSpec,
@@ -208,27 +209,56 @@ for _name, _gen in GENERATOR_FAMILY.items():
 
 @dataclass(frozen=True)
 class SiteTrace:
-    """Row -> rack -> site power composition (watts, [.., T] arrays)."""
+    """Row -> rack -> ... -> site power composition (watts, [.., T] arrays).
+    ``rack_w`` is the leaf-parent level; arbitrary-depth compositions carry
+    the full per-node series in ``node_w`` (leaves first, root last, node
+    order of the folding :class:`~repro.core.hierarchy.PowerHierarchy`)."""
 
     row_w: np.ndarray  # [R, T]
     rack_w: np.ndarray  # [K, T]
     site_w: np.ndarray  # [T]
     rack_of: np.ndarray  # [R] rack index per row
+    node_w: Optional[np.ndarray] = field(default=None, repr=False)  # [N, T]
+    node_names: Tuple[str, ...] = ()
 
 
-def compose_site(row_w: np.ndarray, *, rows_per_rack: int = 2) -> SiteTrace:
-    """Fold per-row power series into rack and site series. Conservation
-    invariants hold exactly: each rack series is the sum of its rows, and the
-    site series is the sum of the rack series."""
+def compose_site(row_w: np.ndarray, *, rows_per_rack: int = 2,
+                 hierarchy: Optional[PowerHierarchy] = None) -> SiteTrace:
+    """Fold per-row power series through the planning hierarchy — one
+    :meth:`~repro.core.hierarchy.PowerHierarchy.fold_w` (the same fold the
+    cluster and fleet simulators account with, so planner-shaped budgets and
+    runtime telemetry can never disagree on composition). Conservation
+    invariants hold exactly: every node's series is the sum of its rows.
+
+    By default the tree is the two-level row -> rack -> site split, which
+    requires ``n_rows`` divisible by ``rows_per_rack`` — a ragged tail rack
+    used to be composed silently; now it raises. Pass an explicit
+    ``hierarchy`` for arbitrary-depth (or ragged) site topologies.
+    """
     row_w = np.atleast_2d(np.asarray(row_w, float))
     n_rows = row_w.shape[0]
-    rack_of = np.arange(n_rows) // max(1, rows_per_rack)
-    n_racks = int(rack_of[-1]) + 1 if n_rows else 0
-    rack_w = np.zeros((n_racks, row_w.shape[1]))
-    for k in range(n_racks):
-        rack_w[k] = row_w[rack_of == k].sum(axis=0)
-    return SiteTrace(row_w=row_w, rack_w=rack_w, site_w=rack_w.sum(axis=0),
-                     rack_of=rack_of)
+    if hierarchy is None:
+        if rows_per_rack < 1:
+            raise ValueError(f"rows_per_rack must be >= 1, got {rows_per_rack}")
+        if n_rows % rows_per_rack:
+            raise ValueError(
+                f"compose_site: {n_rows} rows do not divide into racks of "
+                f"{rows_per_rack} — a ragged tail rack would be silently "
+                f"mis-sized; pass a divisible n_rows or an explicit "
+                f"PowerHierarchy for ragged topologies")
+        # budgets are irrelevant for a watts fold; ones keep the tree valid
+        hierarchy = PowerHierarchy.two_level(
+            np.ones(n_rows), rows_per_rack=rows_per_rack)
+    elif hierarchy.n_leaves != n_rows:
+        raise ValueError(f"hierarchy has {hierarchy.n_leaves} leaves for "
+                         f"{n_rows} rows")
+    node_w = hierarchy.fold_w(row_w.T).T  # [N, T]
+    ordinal = {int(p): k for k, p in enumerate(hierarchy.leaf_parents)}
+    rack_of = np.asarray([ordinal[int(hierarchy.parent[i])]
+                          for i in range(n_rows)])
+    return SiteTrace(row_w=row_w, rack_w=node_w[hierarchy.leaf_parents],
+                     site_w=node_w[hierarchy.root], rack_of=rack_of,
+                     node_w=node_w, node_names=hierarchy.names)
 
 
 # ---------------------------------------------------------------------------

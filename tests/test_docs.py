@@ -31,6 +31,35 @@ def test_scenario_docs_in_sync_with_registry():
         "run: PYTHONPATH=src python tools/gen_scenario_docs.py")
 
 
+def test_registry_docs_in_sync_with_registries():
+    """Acceptance: docs/registries.md is exactly what the generator emits
+    for the live policy/router/admission/rebalance/generator registries."""
+    gen = _gen_module()
+    path = os.path.join(ROOT, "docs", "registries.md")
+    assert os.path.exists(path), "docs/registries.md missing; run the generator"
+    with open(path) as fh:
+        on_disk = fh.read()
+    assert on_disk == gen.generate_registries(), (
+        "docs/registries.md is out of sync with the live registries; "
+        "run: PYTHONPATH=src python tools/gen_scenario_docs.py")
+
+
+def test_registry_docs_cover_every_registered_name():
+    import repro.provisioning  # noqa: F401  (registers the mc-* generators)
+    from repro.core.traces import list_occupancy_generators
+    from repro.experiments.scenario import POLICY_BUILDERS
+    from repro.fleet.controller import REBALANCE_BUILDERS
+    from repro.fleet.router import ADMISSION_BUILDERS, ROUTER_BUILDERS
+    with open(os.path.join(ROOT, "docs", "registries.md")) as fh:
+        text = fh.read()
+    for registry in (POLICY_BUILDERS, ROUTER_BUILDERS, ADMISSION_BUILDERS,
+                     REBALANCE_BUILDERS):
+        for name in registry:
+            assert f"`{name}`" in text, f"registry entry {name!r} missing"
+    for name in list_occupancy_generators():
+        assert f"`{name}`" in text, f"generator {name!r} missing from docs"
+
+
 def test_scenario_docs_cover_every_registered_scenario():
     import repro.provisioning  # noqa: F401  (registers mc-* scenarios)
     from repro.experiments import list_scenarios
@@ -45,6 +74,7 @@ def test_scenario_docs_cover_every_registered_scenario():
     os.path.join("docs", "architecture.md"),
     os.path.join("docs", "quickstart.md"),
     os.path.join("docs", "scenarios.md"),
+    os.path.join("docs", "registries.md"),
 ])
 def test_docs_pages_exist(path):
     assert os.path.exists(os.path.join(ROOT, path))

@@ -1,0 +1,349 @@
+"""PowerHierarchy: per-node conservation under random topologies and
+depths, bit-parity of the two-level path with the legacy RackHierarchy math,
+frac-vector vs legacy 2-tuple publishing, HierarchySpec round-trips, and
+tree-scope controller recursion (determinism + worker-invariance)."""
+
+import numpy as np
+import pytest
+
+from repro.core.hierarchy import PowerHierarchy
+from repro.experiments import (
+    ControllerSpec,
+    FleetSpec,
+    HierarchySpec,
+    PolicySpec,
+    RoutingSpec,
+    Scenario,
+    TrafficSpec,
+    get_scenario,
+    run_experiment,
+)
+from repro.provisioning import EnsembleSpec, run_ensemble
+
+
+# ------------------------------------------------------- random topologies
+def _random_hierarchy(rng: np.random.Generator) -> PowerHierarchy:
+    """A random uniform tree: depth 1-4, fan-outs 1-4, random budgets."""
+    depth = int(rng.integers(1, 5))
+    shape = tuple(int(rng.integers(1, 5)) for _ in range(depth))
+    n_rows = int(np.prod(shape))
+    budgets = rng.uniform(50.0, 500.0, n_rows)
+    fracs = {}
+    if depth >= 2 and rng.random() < 0.5:
+        # derate a random non-root interior node
+        d = int(rng.integers(1, depth))
+        digits = [int(rng.integers(0, shape[k])) for k in range(d)]
+        fracs["/".join(map(str, digits))] = float(rng.uniform(0.5, 0.9))
+    return PowerHierarchy.from_shape(shape, budgets, budget_fracs=fracs)
+
+
+def test_property_per_node_conservation_random_topologies():
+    """For 25 random trees: budget conservation (every interior node's
+    budget == sum of children), watts conservation through node_w/fold_w,
+    and leaf coverage (the root sees every row exactly once)."""
+    rng = np.random.default_rng(42)
+    for trial in range(25):
+        h = _random_hierarchy(rng)
+        assert h.conservation_errors() == [], f"trial {trial}"
+        row_w = rng.uniform(0.0, 400.0, h.n_leaves)
+        node = h.node_w(row_w)
+        for i in range(h.n_leaves, h.n_nodes):
+            np.testing.assert_allclose(node[i], node[h.children[i]].sum(),
+                                       rtol=1e-12)
+        np.testing.assert_allclose(node[h.root], row_w.sum(), rtol=1e-12)
+        power = rng.uniform(0.0, 400.0, (6, h.n_leaves))
+        folded = h.fold_w(power)
+        for i in range(h.n_leaves, h.n_nodes):
+            np.testing.assert_allclose(folded[:, i],
+                                       folded[:, h.children[i]].sum(axis=1),
+                                       rtol=1e-12)
+        # every leaf under the root exactly once
+        assert np.array_equal(h.subtree_leaves(h.root),
+                              np.arange(h.n_leaves))
+
+
+def test_property_publish_vector_depth_and_order():
+    """The published frac vector is level-indexed: one entry per ancestor,
+    nearest (rack) first, root last — and each entry is that node's watts
+    over its budget."""
+    class Row:
+        group_fracs = (None, None)
+
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        h = _random_hierarchy(rng)
+        rows = [Row() for _ in range(h.n_leaves)]
+        row_w = rng.uniform(10.0, 300.0, h.n_leaves)
+        frac = h.publish(rows, row_w)
+        node = h.node_w(row_w)
+        np.testing.assert_allclose(frac, node / h.node_budget_w, rtol=1e-12)
+        for i, r in enumerate(rows):
+            assert len(r.group_fracs) == len(h.ancestors[i])
+            for lv, a in enumerate(h.ancestors[i]):
+                assert r.group_fracs[lv] == float(frac[a])
+            assert r.group_fracs[-1] == float(frac[h.root])
+
+
+def test_two_level_fold_bit_parity_with_legacy_math():
+    """Acceptance: the PowerHierarchy fold of a two-level tree reproduces
+    the pre-refactor RackHierarchy expressions bit for bit (np.array_equal,
+    not allclose) — rows, ragged last rack, and the direct all-rows cluster
+    sum included."""
+    rng = np.random.default_rng(3)
+    # the wide cases (> 8 rows per rack / > 8 rows total) exercise the
+    # regime where numpy's pairwise reduction diverges from sequential
+    # accumulation — exactly where naive folds break bit-parity
+    for n_rows, rpr in ((4, 2), (5, 2), (9, 4), (6, 3), (3, 1), (20, 10),
+                        (24, 12), (13, 13)):
+        row_b = rng.uniform(100.0, 400.0, n_rows)
+        h = PowerHierarchy.two_level(row_b, rows_per_rack=rpr)
+        rack_of = np.asarray([i // rpr for i in range(n_rows)])
+        n_racks = int(rack_of[-1]) + 1
+        rack_b = np.asarray([float(row_b[rack_of == k].sum())
+                             for k in range(n_racks)])
+        cluster_b = float(rack_b.sum())
+        power = rng.uniform(0.0, 500.0, (11, n_rows))
+        # legacy RackHierarchy.fold, verbatim
+        row_frac = power / row_b[None, :]
+        rack_w = np.zeros((11, n_racks))
+        for k in range(n_racks):
+            rack_w[:, k] = power[:, rack_of == k].sum(axis=1)
+        rack_frac = rack_w / rack_b[None, :]
+        cluster_frac = power.sum(axis=1) / cluster_b
+        folded = h.fold(power)
+        assert np.array_equal(folded[:, :n_rows], row_frac)
+        assert np.array_equal(folded[:, h.leaf_parents], rack_frac)
+        assert np.array_equal(folded[:, h.root], cluster_frac)
+        # legacy publish_group_fracs, verbatim (np.add.at accumulation)
+        class Row:
+            group_fracs = (None, None)
+        rows = [Row() for _ in range(n_rows)]
+        row_w = rng.uniform(0.0, 500.0, n_rows)
+        frac = h.publish(rows, row_w)
+        rw = np.zeros(n_racks)
+        np.add.at(rw, rack_of, row_w)
+        legacy_rack = rw / rack_b
+        legacy_cluster = float(row_w.sum() / cluster_b)
+        for i, r in enumerate(rows):
+            assert r.group_fracs == (float(legacy_rack[rack_of[i]]),
+                                     legacy_cluster)
+        assert float(frac[h.root]) == legacy_cluster
+
+
+def test_row_group_fracs_legacy_two_tuple_property():
+    """RowSimulator.group_fracs stays a (rack, cluster) 2-tuple view of the
+    level-indexed vector, whatever the tree depth."""
+    from repro.core.simulator import RowSimulator
+    row = RowSimulator.__new__(RowSimulator)
+    row._group_frac_vec = (None, None)
+    assert row.group_fracs == (None, None)
+    row.group_fracs = (0.5, 0.6)  # legacy writer
+    assert row.group_fracs == (0.5, 0.6)
+    assert row.group_frac_vec == (0.5, 0.6)
+    row.group_fracs = (0.5, 0.7, 0.9)  # deep-tree publisher
+    assert row.group_fracs == (0.5, 0.9), "nearest level first, root last"
+    assert row.group_frac_vec == (0.5, 0.7, 0.9)
+
+
+def test_invalid_topologies_rejected():
+    with pytest.raises(ValueError, match="root"):
+        PowerHierarchy([2, 2, -1, -1], [1.0, 1.0, 2.0, 2.0], 2)
+    with pytest.raises(ValueError, match="children first"):
+        PowerHierarchy([-1, 0, 0], [2.0, 1.0, 1.0], 2)
+    with pytest.raises(ValueError):
+        PowerHierarchy.from_shape((2, 2), np.ones(3))  # 3 budgets, 4 rows
+    with pytest.raises(ValueError, match="childless"):
+        # node 1 is interior (n_leaves=1) but nothing hangs under it
+        PowerHierarchy([2, 2, -1], [1.0, 1.0, 2.0], 1)
+    # derates must be positive finite multipliers: a 0 W budget divides
+    # telemetry by zero (and the RowSimulator nominal fallback would
+    # silently undo it)
+    for bad in (0.0, -0.5, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="positive finite"):
+            PowerHierarchy.from_shape((2, 2), np.ones(4),
+                                      budget_fracs={"0": bad})
+    # an explicit hierarchy excludes the two-level budget arguments
+    from repro.experiments.cluster import resolve_row_hierarchy
+
+    class _Row:
+        provisioned_w = 100.0
+
+    rows = [_Row(), _Row()]
+    h = PowerHierarchy.two_level([100.0, 100.0])
+    with pytest.raises(ValueError, match="not both"):
+        resolve_row_hierarchy(rows, h, rack_budget_w=[150.0])
+    assert resolve_row_hierarchy(rows, h) is h
+    with pytest.raises(ValueError, match="leaves"):
+        resolve_row_hierarchy(rows + [_Row()], h)
+
+
+# ------------------------------------------------------------ HierarchySpec
+def test_hierarchy_spec_round_trip_and_build():
+    sc = get_scenario("site-tree-predictive")
+    assert sc.hierarchy is not None
+    assert Scenario.from_json(sc.to_json()) == sc
+    h = sc.hierarchy.build(np.full(sc.fleet.n_rows, 100.0))
+    assert h.n_leaves == sc.fleet.n_rows == sc.hierarchy.n_rows
+    assert h.depth == 3
+    assert h.conservation_errors() == []
+    # the derate propagated down to rack0.1's three rows
+    assert np.allclose(h.leaf_budget_w[3:6], 70.0)
+    assert np.allclose(h.leaf_budget_w[:3], 100.0)
+
+
+def test_with_hierarchy_sizes_fleet():
+    sc = (get_scenario("fleet-cap-aware")
+          .with_hierarchy((2, 2, 2), budget_fracs={"1": 0.8}))
+    assert sc.hierarchy.shape == (2, 2, 2)
+    assert sc.fleet.n_rows == 8
+    assert Scenario.from_json(sc.to_json()) == sc
+
+
+# ------------------------------------------------- controller tree recursion
+def _site_scenario(**kw) -> Scenario:
+    base = dict(
+        name="hier-test",
+        duration_s=1500.0,
+        fleet=FleetSpec(n_provisioned=16, added_frac=0.25, n_rows=8),
+        policy=PolicySpec("polca"),
+        traffic=TrafficSpec(occ_peak=0.9),
+        routing=RoutingSpec("cap-aware"),
+        controller=ControllerSpec("predictive", interval_s=30.0, scope="tree"),
+        hierarchy=HierarchySpec(shape=(2, 2, 2), budget_fracs={"0/1": 0.7}),
+        budget="nominal",
+        compare_to_reference=False,
+    )
+    base.update(kw)
+    return Scenario(**base)
+
+
+def test_tree_scope_conserves_every_node():
+    o = run_experiment(_site_scenario())
+    f = o.fleet
+    assert f.n_rebalances > 0, "the derated site must trigger rebalances"
+    h = _site_scenario().hierarchy.build(np.ones(8))
+    for ev in f.rebalances:
+        na, nb = ev.node_budgets_after_w, ev.node_budgets_before_w
+        assert na is not None and nb is not None
+        for i in range(h.n_leaves, h.n_nodes):
+            kids = h.children[i]
+            assert abs(float(na[kids].sum()) - float(na[i])) <= 1e-6
+        assert float(na[h.root]) == float(nb[h.root]), "root envelope frozen"
+        assert ev.moved_w() > 0.0
+    # per-tick node budget matrix conserves at every level
+    for i in range(h.n_leaves, h.n_nodes):
+        kids = h.children[i]
+        assert np.allclose(f.node_budget_w[:, kids].sum(axis=1),
+                           f.node_budget_w[:, i], atol=1e-3)
+    root = f.node_budget_w[:, h.root]
+    assert np.allclose(root, root[0], atol=1e-6)
+
+
+def test_tree_scope_moves_budget_across_racks():
+    """The derated rack (node rack0.1, rows 2-3) must gain *interior* budget
+    from its sibling rack / the other PDU set — motion a rack-scope
+    controller structurally cannot produce."""
+    o = run_experiment(_site_scenario())
+    f = o.fleet
+    names = list(f.node_names)
+    derated = names.index("rack0.1")
+    sibling = names.index("rack0.0")
+    assert float(f.node_budget_w[:, derated].max()) > \
+        float(f.node_budget_w[0, derated])
+    assert float(f.node_budget_w[:, sibling].min()) < \
+        float(f.node_budget_w[0, sibling])
+    # rack-scope on the same scenario never moves interior budgets
+    o2 = run_experiment(_site_scenario(
+        controller=ControllerSpec("predictive", interval_s=30.0, scope="rack")))
+    nb = o2.fleet.node_budget_w
+    assert np.all(nb[:, derated] == nb[0, derated])
+    assert np.all(nb[:, sibling] == nb[0, sibling])
+
+
+def test_tree_scope_static_policy_never_moves():
+    o = run_experiment(_site_scenario(
+        controller=ControllerSpec("static", scope="tree", interval_s=30.0)))
+    assert o.fleet.n_rebalances == 0
+    assert np.all(o.fleet.node_budget_w == o.fleet.node_budget_w[0])
+
+
+def test_tree_recursion_determinism():
+    a = run_experiment(_site_scenario())
+    b = run_experiment(_site_scenario())
+    assert a.result.latencies == b.result.latencies
+    assert len(a.fleet.rebalances) == len(b.fleet.rebalances)
+    for ea, eb in zip(a.fleet.rebalances, b.fleet.rebalances):
+        assert ea.t == eb.t
+        assert np.array_equal(ea.node_budgets_after_w, eb.node_budgets_after_w)
+    c = run_experiment(_site_scenario(seed=8))
+    assert a.result.latencies != c.result.latencies, "seed must matter"
+
+
+def test_tree_controller_ensemble_worker_invariance():
+    """Hierarchy-bearing fleet members are bit-identical across Monte-Carlo
+    worker counts (the controller recursion is pure per-member state)."""
+    base = _site_scenario(duration_s=1000.0)
+    e1 = run_ensemble(EnsembleSpec(base, n_seeds=2, seed0=900, n_workers=1))
+    e2 = run_ensemble(EnsembleSpec(base, n_seeds=2, seed0=900, n_workers=2))
+    assert np.array_equal(e1.brake_counts, e2.brake_counts)
+    for m1, m2 in zip(e1.members, e2.members):
+        assert m1.result.latencies == m2.result.latencies
+        assert np.array_equal(m1.result.power_w, m2.result.power_w)
+
+
+def test_site_scenarios_registered():
+    from repro.experiments import SITE_SCENARIO_FAMILY
+    for name in SITE_SCENARIO_FAMILY:
+        sc = get_scenario(name)
+        assert sc.hierarchy is not None and sc.routing is not None
+        assert sc.hierarchy.n_rows == sc.fleet.n_rows
+        assert Scenario.from_json(sc.to_json()) == sc
+    assert get_scenario("site-tree-predictive").controller.scope == "tree"
+
+
+def test_shed_tokens_admission_registered_and_metered():
+    """The token-budget admission controller sheds a bounded token slice of
+    LP during an emergency (non-boolean), never HP, and resets when the
+    emergency clears."""
+    from repro.core.simulator import Request
+    from repro.fleet import ShedTokenBudget, build_admission
+    from repro.fleet.router import FleetView
+
+    adm = build_admission("shed-tokens", {"relief_tokens_per_s": 100.0,
+                                          "burst_tokens": 300.0})
+    assert isinstance(adm, ShedTokenBudget) and adm.needs_view
+
+    def req(rid, prio="low", tokens=200):
+        return Request(t_arrival=0.0, wl=0, prompt=64, out_tokens=tokens,
+                       priority=prio, rid=rid)
+
+    calm = FleetView(t=0.0, cluster_frac=0.5, n_braked=0)
+    hot = lambda t: FleetView(t=t, cluster_frac=0.99, n_braked=0)
+    assert adm.admit(req(0), calm)
+    # emergency opens: burst debt of 300 tokens -> sheds 2 x 200-token LP
+    # requests (debt 300 -> 100 -> 0 plus accrual), then admits again
+    assert not adm.admit(req(1), hot(10.0))
+    assert not adm.admit(req(2), hot(10.5))
+    assert adm.admit(req(3), hot(10.6)), "debt paid: metered, not boolean"
+    # HP is never shed, even with outstanding debt
+    adm2 = build_admission("shed-tokens", {})
+    assert adm2.admit(req(4, prio="high"), hot(20.0))
+    # emergency clears -> debt resets
+    assert adm.admit(req(5), calm)
+
+
+def test_shed_tokens_fleet_run_sheds_fewer_than_shed_lp():
+    """On the emergency-heavy fleet-rr-shed scenario, token-metered shedding
+    drops less LP goodput than boolean shed-lp on the same trace, and sheds
+    only LP."""
+    base = get_scenario("fleet-rr-shed").with_(duration_s=1800.0,
+                                               compare_to_reference=False)
+    lp = run_experiment(base)
+    tok = run_experiment(base.with_(routing=RoutingSpec(
+        "round-robin", admission="shed-tokens",
+        admission_params={"shed_above": 0.97})))
+    assert tok.fleet.n_shed.get("high", 0) == 0
+    assert lp.fleet.n_shed_total > 0, "scenario must actually shed"
+    assert 0 < tok.fleet.n_shed_total <= lp.fleet.n_shed_total
+    # conservation still exact
+    assert tok.fleet.n_admitted + tok.fleet.n_shed_total == tok.fleet.n_offered

@@ -93,7 +93,7 @@ def test_compose_rows_correlation_extremes():
 
 def test_compose_site_conservation_invariants():
     rng = np.random.default_rng(0)
-    row_w = rng.uniform(10.0, 100.0, size=(5, 40))
+    row_w = rng.uniform(10.0, 100.0, size=(6, 40))
     site = compose_site(row_w, rows_per_rack=2)
     assert site.rack_w.shape == (3, 40)
     for k in range(3):
@@ -102,6 +102,25 @@ def test_compose_site_conservation_invariants():
                                    rtol=1e-12)
     np.testing.assert_allclose(site.site_w, row_w.sum(axis=0), rtol=1e-12)
     np.testing.assert_allclose(site.site_w, site.rack_w.sum(axis=0), rtol=1e-12)
+    # the full per-node series is carried too (leaves, racks, root)
+    assert site.node_w.shape == (6 + 3 + 1, 40)
+    assert site.node_names[-1] == "cluster"
+
+
+def test_compose_site_rejects_ragged_racks():
+    """Regression: n_rows not divisible by rows_per_rack used to compose a
+    silently mis-sized tail rack; it must raise a clear ValueError now."""
+    row_w = np.ones((5, 16))
+    with pytest.raises(ValueError, match="do not divide into racks"):
+        compose_site(row_w, rows_per_rack=2)
+    with pytest.raises(ValueError, match="rows_per_rack"):
+        compose_site(np.ones((4, 8)), rows_per_rack=0)
+    # an explicit hierarchy is the sanctioned escape hatch for ragged trees
+    from repro.core.hierarchy import PowerHierarchy
+    ragged = PowerHierarchy.two_level(np.ones(5), rows_per_rack=2)
+    site = compose_site(row_w, hierarchy=ragged)
+    assert site.rack_w.shape == (3, 16)
+    np.testing.assert_allclose(site.site_w, row_w.sum(axis=0), rtol=1e-12)
 
 
 # ---------------------------------------------------------------- registry

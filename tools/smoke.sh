@@ -23,7 +23,10 @@ python -m benchmarks.run --quick --only fleet_routing
 echo "== fleet-rebalance quick benchmark =="
 python -m benchmarks.run --quick --only fleet_rebalance
 
-echo "== scenario docs sync check =="
+echo "== site-hierarchy quick benchmark =="
+python -m benchmarks.run --quick --only site_hierarchy
+
+echo "== scenario + registry docs sync check =="
 python tools/gen_scenario_docs.py --check
 
 echo "smoke OK"

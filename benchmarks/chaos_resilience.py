@@ -1,0 +1,174 @@
+"""Chaos-engine resilience: fault timelines vs the power control plane
+(DESIGN.md §13).
+
+Validates the :mod:`repro.chaos` subsystem's three claims on the registered
+``chaos-*`` scenarios — a healthy 12-row site (2 PDU sets x 2 racks x 3
+rows) hit by injected faults mid-trace:
+
+  * **PDU loss separates static budgets from tree-scope rebalancing** — a
+    30% derate on ``pdu0`` powerbrakes the static fleet (half the site
+    suddenly over-subscribes a shrunken feed), while tree-scope predictive
+    rebalancing + shed-lp admission rides the same fault through with zero
+    brakes and bounded HP p99: the controller re-divides the surviving
+    envelope under the new physical cap (``node_cap_w``) instead of
+    "healing" the fault;
+  * **crash -> revive conserves work and watts** — every offered request is
+    admitted or shed (``admitted + shed == offered`` across the outage), no
+    request is dispatched to the dead row, the row re-enters service after
+    revival, and a demand-response event returns the root envelope to its
+    pre-fault value *exactly* (the injector restores the tracked delta, not
+    an inverse factor);
+  * **the planner prices survivability** — ``RiskConstraints.survive``
+    re-runs every capacity probe under a k-row-crash timeline, and the safe
+    oversubscription that survives the crash is strictly below the
+    fault-free figure but strictly above zero: k-failure tolerance costs
+    headroom, it does not erase it.
+
+A no-op ``FaultSpec`` is also asserted invisible here (``chaos-noop`` is
+bit-identical to ``site-static``), the same parity tier-1 asserts.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, module_main, seeded
+from repro.chaos import FaultEvent, FaultSpec
+from repro.experiments import get_scenario, run_experiment
+from repro.experiments.scenario import (
+    ControllerSpec,
+    FleetSpec,
+    HierarchySpec,
+    PolicySpec,
+    RoutingSpec,
+    Scenario,
+    TrafficSpec,
+)
+from repro.provisioning.planner import RiskConstraints, plan_capacity
+
+HP_P99_SLO = 0.05  # Table 5
+
+CHAOS_RUN_ORDER = ("chaos-pdu-loss-static", "chaos-pdu-loss-tree",
+                   "chaos-row-crash", "chaos-demand-response")
+
+
+def run(quick: bool = False) -> Bench:
+    b = Bench()
+    dur = 2 * 3600.0 if quick else None  # registered: 6 h
+    base = seeded(get_scenario("chaos-pdu-loss-static"))
+    if dur is not None:
+        base = base.with_(duration_s=dur)
+    # one explicit thin-headroom budget for the whole family (the registered
+    # 105 kW/row): every fault hits the same healthy-site envelope, so
+    # differences are attributable to the fault + the control plane
+    budget = base.budget
+
+    outs = {}
+    for name in CHAOS_RUN_ORDER:
+        sc = seeded(get_scenario(name)).with_(duration_s=base.duration_s,
+                                              budget=budget)
+        t0 = time.perf_counter()
+        o = run_experiment(sc)
+        us = (time.perf_counter() - t0) * 1e6
+        kind = name.removeprefix("chaos-")
+        outs[kind] = o
+        s = o.stats.summary()
+        f = o.fleet
+        b.add(f"chaos/{kind}",
+              f"hp_p99={s['hp_p99']:.1%} brakes={o.result.n_brakes} "
+              f"faults={f.n_fault_events} shed={f.n_shed_total} "
+              f"rebalances={f.n_rebalances}", us, None)
+
+    # ---- headline: PDU loss — static collapses, tree+shed-lp rides through
+    st = outs["pdu-loss-static"]
+    tr = outs["pdu-loss-tree"]
+    tr_s = tr.stats.summary()
+    recovered = (st.result.n_brakes > 0 and tr.result.n_brakes == 0
+                 and tr_s["hp_p99"] < HP_P99_SLO)
+    b.add("chaos/pdu_loss_recovery",
+          f"static brakes={st.result.n_brakes} under 30% pdu0 derate; "
+          f"tree-scope predictive + shed-lp brakes={tr.result.n_brakes} "
+          f"hp_p99={tr_s['hp_p99']:.2%} on the same fault + envelope",
+          0.0, recovered)
+
+    # ---- headline: crash -> revive conserves offered work ------------------
+    cr = outs["row-crash"].fleet
+    crash_ev = [e for e in seeded(get_scenario("chaos-row-crash")).faults.events
+                if e.kind == "row-crash"][0]
+    revive_t = [e for e in seeded(get_scenario("chaos-row-crash")).faults.events
+                if e.kind == "row-revive"][0].t
+    dead_row = crash_ev.row
+    conserved = cr.n_offered == cr.n_admitted + cr.n_shed_total
+    to_dead = [d for d in cr.decisions
+               if d.row == dead_row and crash_ev.t < d.t <= revive_t]
+    after = [d for d in cr.decisions if d.row == dead_row and d.t > revive_t]
+    dead_ticks = (int((~cr.row_alive[:, dead_row]).sum())
+                  if cr.row_alive is not None else 0)
+    b.add("chaos/crash_conservation",
+          f"offered={cr.n_offered} == admitted+shed="
+          f"{cr.n_admitted + cr.n_shed_total}; {len(to_dead)} dispatches to "
+          f"row {dead_row} during the {dead_ticks}-tick outage, "
+          f"{len(after)} after revival",
+          0.0, conserved and not to_dead and len(after) > 0 and dead_ticks > 0)
+
+    # ---- demand-response: the ONLY thing that moves the root, and it moves
+    # back exactly (restore returns the tracked delta, not an inverse factor)
+    dr = outs["demand-response"].fleet
+    root = list(dr.node_names).index("site")
+    col = dr.node_budget_w[:, root]
+    dipped = float(col.min()) < float(col[0]) - 1.0
+    returned = abs(float(col[-1]) - float(col[0])) < 1e-6
+    b.add("chaos/demand_response_round_trip",
+          f"root envelope {col[0] / 1e3:.0f}kW -> min {col.min() / 1e3:.0f}kW "
+          f"-> final {col[-1] / 1e3:.0f}kW (exact return); "
+          f"{dr.n_fault_events} fault records", 0.0,
+          dipped and returned and dr.n_fault_events >= 2)
+
+    # ---- no-op FaultSpec is bit-invisible ----------------------------------
+    par_dur = min(base.duration_s, 1800.0)
+    noop = run_experiment(seeded(get_scenario("chaos-noop")).with_(
+        duration_s=par_dur, compare_to_reference=False))
+    site = run_experiment(seeded(get_scenario("site-static")).with_(
+        duration_s=par_dur, compare_to_reference=False))
+    bit = (noop.result.latencies == site.result.latencies
+           and noop.fleet.decisions == site.fleet.decisions
+           and np.array_equal(noop.fleet.cluster_power_frac,
+                              site.fleet.cluster_power_frac))
+    b.add("chaos/noop_bit_parity",
+          f"chaos-noop (empty FaultSpec) == site-static bit-for-bit: {bit}",
+          0.0, bit)
+
+    # ---- headline: the oversubscription cost of k-failure survivability ----
+    plan_base = seeded(Scenario(
+        name="chaos-plan", duration_s=1800.0,
+        fleet=FleetSpec(n_provisioned=8, added_frac=0.0, n_rows=4),
+        policy=PolicySpec("polca"),
+        traffic=TrafficSpec(occ_peak=0.62),
+        routing=RoutingSpec("cap-aware", admission="shed-lp",
+                            admission_params={"shed_above": 0.97}),
+        controller=ControllerSpec("predictive", scope="tree"),
+        hierarchy=HierarchySpec(shape=(2, 2)), budget="calibrated"))
+    crash2 = FaultSpec((FaultEvent("row-crash", t=600.0, row=0),
+                        FaultEvent("row-crash", t=700.0, row=1),
+                        FaultEvent("row-revive", t=1500.0, row=0),
+                        FaultEvent("row-revive", t=1500.0, row=1)))
+    n_seeds = 2 if quick else 3
+    t0 = time.perf_counter()
+    free = plan_capacity(plan_base, n_seeds=n_seeds, max_added_frac=0.5)
+    surv = plan_capacity(plan_base,
+                         constraints=RiskConstraints(survive=crash2),
+                         n_seeds=n_seeds, max_added_frac=0.5)
+    us = (time.perf_counter() - t0) * 1e6
+    priced = 0 < surv.safe_added_servers < free.safe_added_servers
+    b.add("chaos/planner_survivability",
+          f"fault-free safe_added={free.safe_added_servers} "
+          f"(+{free.safe_added_frac:.0%}); surviving a 2-row crash "
+          f"safe_added={surv.safe_added_servers} (+{surv.safe_added_frac:.0%}) "
+          f"over {len(surv.probes)} probes", us, priced)
+    return b
+
+
+if __name__ == "__main__":
+    module_main(run)

@@ -28,6 +28,7 @@ MODULES = [
     "benchmarks.fleet_routing",
     "benchmarks.fleet_rebalance",
     "benchmarks.site_hierarchy",
+    "benchmarks.chaos_resilience",
     "benchmarks.phase_aware_savings",
     "benchmarks.kernel_micro",
     "benchmarks.roofline_table",

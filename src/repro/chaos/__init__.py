@@ -1,0 +1,24 @@
+"""Chaos engine: injectable fault timelines for oversubscribed fleets.
+
+The data model (:class:`FaultSpec` / :class:`FaultEvent`, pure data, JSON
+round-trippable) lives in :mod:`repro.chaos.faults`; the runtime
+(:class:`ChaosInjector`, polled by ``FleetSimulator`` between telemetry
+ticks) in :mod:`repro.chaos.injector`. Scenarios opt in with
+``Scenario.with_faults``; see DESIGN.md §13 and the ``chaos-*`` scenario
+family.
+"""
+
+from repro.chaos.faults import (  # noqa: F401
+    FAULT_EVENT_BUILDERS,
+    FaultEvent,
+    FaultSpec,
+)
+from repro.chaos.injector import ChaosInjector, FaultRecord  # noqa: F401
+
+__all__ = [
+    "FAULT_EVENT_BUILDERS",
+    "FaultEvent",
+    "FaultSpec",
+    "ChaosInjector",
+    "FaultRecord",
+]

@@ -29,7 +29,10 @@ single structure they all now share:
 The fleet rebalancing controller mutates ``node_budget_w`` for interior
 nodes when it re-divides a site budget across racks
 (:class:`~repro.fleet.controller.FleetController` ``scope="tree"``); the
-tree's *root* budget is the envelope and never moves.
+tree's *root* budget is the envelope and never moves under rebalancing.
+Only the chaos engine (:mod:`repro.chaos`) may change the root: a fault
+event physically removes (and later returns) deliverable watts, recorded
+as ``node_cap_w`` capacity ceilings the controller's divisions respect.
 """
 
 from __future__ import annotations
@@ -85,6 +88,14 @@ class PowerHierarchy:
             + [f"node{i}" for i in range(self.n_leaves, self.n_nodes)])
         if len(self.names) != self.n_nodes:
             raise ValueError(f"{len(self.names)} names for {self.n_nodes} nodes")
+        # physical capacity ceilings, +inf by default. Distinct from budgets:
+        # a budget is the *planner's* division of the envelope and moves
+        # freely under rebalancing; a cap is what the hardware can currently
+        # deliver. The chaos engine lowers a node's cap on a derate (PDU feed
+        # loss, thermal throttle) and the rebalancing controller clamps its
+        # divisions to it — otherwise a tree-scope pass would "heal" the
+        # fault by growing the derated subtree back on its next interval.
+        self.node_cap_w = np.full(self.n_nodes, np.inf)
 
         self.children: List[np.ndarray] = [
             np.flatnonzero(self.parent == i) for i in range(self.n_nodes)]

@@ -70,6 +70,10 @@ class SimResult:
     mean_power_frac: float
     power_t: np.ndarray = field(default=None, repr=False)
     power_w: np.ndarray = field(default=None, repr=False)
+    # per-sample powerbrake state on the power_t grid (True while the row's
+    # policy holds the brake) — the signal runtime.fault_tolerance's
+    # BrakeSentinel turns into sustained-brake power events
+    braked_series: np.ndarray = field(default=None, repr=False)
     latencies: Dict[int, float] = field(default_factory=dict, repr=False)
     cap_events: int = 0
     # time each completed request waited before prefill started (fleet
@@ -166,6 +170,7 @@ class RowSimulator:
         self.result = SimResult(LatencyStats(), 0, 0, 0, 0.0, 0.0, 0.0)
         self._power_samples_t: List[float] = []
         self._power_samples_w: List[float] = []
+        self._braked_samples: List[bool] = []
         self._power_integral = 0.0
         self._last_power_t = 0.0
         self._peak = 0.0
@@ -368,6 +373,7 @@ class RowSimulator:
         if self.cfg.record_power:
             res.power_t = np.asarray(self._power_samples_t)
             res.power_w = np.asarray(self._power_samples_w)
+            res.braked_series = np.asarray(self._braked_samples, dtype=bool)
         return res
 
     def candidates(self, wl: int, priority: str) -> List[_Server]:
@@ -448,6 +454,7 @@ class RowSimulator:
             if self.cfg.record_power:
                 self._power_samples_t.append(t)
                 self._power_samples_w.append(tel.power_frac)
+                self._braked_samples.append(bool(tel.braked))
             self._push(t + self.cfg.telemetry_s, "telemetry", ())
         elif kind == "apply":
             lp, hp = args

@@ -7,6 +7,7 @@ telemetry x seed), run it with :func:`run_experiment`, and read a structured
 :class:`~repro.core.telemetry.Telemetry` samples. See DESIGN.md §8.
 """
 
+from repro.chaos import FaultEvent, FaultSpec
 from repro.core.hierarchy import PowerHierarchy
 from repro.core.telemetry import Telemetry, TelemetryPolicy, dispatch
 from repro.experiments.cluster import ClusterResult, ClusterSimulator, RackHierarchy
@@ -23,6 +24,7 @@ from repro.experiments.runner import (
     threshold_search,
 )
 from repro.experiments.scenario import (
+    CHAOS_SCENARIO_FAMILY,
     DAY,
     FLEET_SCENARIO_FAMILY,
     SITE_SCENARIO_FAMILY,
@@ -42,12 +44,15 @@ from repro.experiments.scenario import (
 
 __all__ = [
     "BASELINE_PEAK_UTIL",
+    "CHAOS_SCENARIO_FAMILY",
     "ClusterResult",
     "ClusterSimulator",
     "ControllerSpec",
     "DAY",
     "ExperimentResult",
     "FLEET_SCENARIO_FAMILY",
+    "FaultEvent",
+    "FaultSpec",
     "FleetSpec",
     "HierarchySpec",
     "PowerHierarchy",

@@ -189,6 +189,13 @@ def run_experiment(scenario: Scenario, *,
     if scenario.duration_s <= 0:
         raise ValueError(f"scenario {scenario.name!r}: duration_s must be > 0, "
                          f"got {scenario.duration_s}")
+    faults = getattr(scenario, "faults", None)
+    if faults is not None and not faults.is_noop and scenario.routing is None:
+        # the ChaosInjector rides the FleetSimulator tick lockstep; the
+        # per-row/cluster paths have no dispatcher to fence rows from
+        raise ValueError(
+            f"scenario {scenario.name!r} carries a fault timeline but no "
+            f"RoutingSpec; the chaos engine needs a routed fleet")
     server = server if server is not None else scenario.fleet.server()
     wls, shares = workloads if workloads is not None else build_workloads(scenario)
     budget_w = resolve_budget(scenario, wls, shares, server)

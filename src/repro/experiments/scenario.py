@@ -20,6 +20,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.chaos.faults import FaultEvent, FaultSpec
 from repro.core.policy import NoCap, OneThreshold, PolcaPolicy, PredictivePolcaPolicy
 from repro.core.power_model import A100, TPU_V5E, DevicePower, ServerPower
 from repro.core.slo import DEFAULT_SLO, SLO
@@ -209,6 +210,11 @@ class Scenario:
     # the power-budget tree over the rows (None = the classic two-level
     # rows_per_rack split, exactly the pre-hierarchy behavior)
     hierarchy: Optional[HierarchySpec] = None
+    # chaos engine: an injectable fault timeline (row crashes, PDU loss,
+    # thermal derates, demand-response) applied between telemetry ticks by
+    # repro.chaos.ChaosInjector. Requires routing; None or an empty spec is
+    # exactly the fault-free fleet (bit-identical, tier-1-asserted)
+    faults: Optional[FaultSpec] = None
 
     def with_(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
@@ -237,6 +243,14 @@ class Scenario:
         prev = self.controller or ControllerSpec()
         return self.with_(controller=dataclasses.replace(
             prev, kind=kind, params=params, **spec_kw))
+
+    def with_faults(self, faults) -> "Scenario":
+        """Same scenario under a fault timeline: a
+        :class:`~repro.chaos.faults.FaultSpec`, an iterable of
+        :class:`~repro.chaos.faults.FaultEvent`, or ``None`` to clear."""
+        if faults is not None and not isinstance(faults, FaultSpec):
+            faults = FaultSpec(tuple(faults))
+        return self.with_(faults=faults)
 
     def with_hierarchy(self, shape: Tuple[int, ...], **kw) -> "Scenario":
         """Same scenario under an explicit budget tree (and a fleet sized to
@@ -271,6 +285,8 @@ class Scenario:
             if h.get("level_names") is not None:
                 h["level_names"] = tuple(h["level_names"])
             d["hierarchy"] = HierarchySpec(**h)
+        if d.get("faults") is not None:
+            d["faults"] = FaultSpec.from_dict(d["faults"])
         return cls(**d)
 
     def to_json(self) -> str:
@@ -464,4 +480,69 @@ SITE_SCENARIO_FAMILY: List[str] = [
     "site-static",
     "site-rack-predictive",
     "site-tree-predictive",
+]
+
+# Chaos scenarios (repro.chaos): the 12-row site under injected fault
+# timelines. Unlike the site-* family the site starts *healthy* (no
+# budget_fracs derate) — the fault is the only stress, so every variant
+# isolates how the unchanged control plane handles one emergency:
+#
+# * chaos-noop         — site-static plus an empty FaultSpec: the tier-1
+#                        bit-parity anchor (must be identical to the PR 5
+#                        fleet, byte for byte).
+# * chaos-pdu-loss-*   — pdu0 (half the site) loses 30% of its feed for a
+#                        40 min window mid-trace (the OOB budget step-down
+#                        ramps over 2 min as the redundant feed saturates).
+#                        `static` + admit-all holds budgets where
+#                        provisioning put them and powerbrakes; `tree`
+#                        re-divides the shrunk site envelope around the
+#                        capacity cap every interval while shed-lp sheds LP
+#                        load during the emergency. The family pins an
+#                        explicit thin-headroom row budget (105 kW, ~98% of
+#                        nominal) — the operating point where a 30% PDU
+#                        derate is survivable by rebalancing but not by
+#                        static budgets (benchmarks/chaos_resilience.py).
+# * chaos-row-crash    — one row crashes and later revives: the
+#                        conservation demo (admitted + shed == offered
+#                        across the outage; in-flight work drains; revival
+#                        re-enters via inject()).
+# * chaos-demand-response — a grid event ramps the *site* envelope down 15%
+#                        over 10 min and restores it later; tree-scope
+#                        rebalancing follows the shrinking root.
+_CHAOS_BASE = Scenario(
+    name="chaos-pdu-loss-static",
+    duration_s=DAY / 4,
+    fleet=FleetSpec(n_provisioned=20, added_frac=0.05, n_rows=12),
+    policy=PolicySpec("polca"),
+    traffic=TrafficSpec(occ_peak=0.70, gen_params={"trough": 0.62}),
+    routing=RoutingSpec("cap-aware"),
+    controller=ControllerSpec("static"),
+    hierarchy=HierarchySpec(shape=(2, 2, 3)),
+    budget=105_000.0,
+    faults=FaultSpec((FaultEvent("node-derate", t=2400.0, node="pdu0",
+                                 factor=0.7, until=4800.0, ramp_s=120.0),)),
+)
+register_scenario(_SITE_BASE.with_(name="chaos-noop", faults=FaultSpec()))
+register_scenario(_CHAOS_BASE)
+register_scenario(_CHAOS_BASE.with_controller("predictive", scope="tree")
+                  .with_(name="chaos-pdu-loss-tree",
+                         routing=RoutingSpec(
+                             "cap-aware", admission="shed-lp",
+                             admission_params={"shed_above": 0.97})))
+register_scenario(_CHAOS_BASE.with_(
+    name="chaos-row-crash",
+    faults=FaultSpec((FaultEvent("row-crash", t=1800.0, row=3),
+                      FaultEvent("row-revive", t=4500.0, row=3)))))
+register_scenario(_CHAOS_BASE.with_controller("predictive", scope="tree")
+                  .with_(name="chaos-demand-response",
+                         faults=FaultSpec((FaultEvent(
+                             "site-demand-response", t=2400.0, factor=0.85,
+                             ramp_s=600.0, until=5400.0),))))
+
+CHAOS_SCENARIO_FAMILY: List[str] = [
+    "chaos-noop",
+    "chaos-pdu-loss-static",
+    "chaos-pdu-loss-tree",
+    "chaos-row-crash",
+    "chaos-demand-response",
 ]

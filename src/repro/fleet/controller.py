@@ -235,7 +235,7 @@ class FleetController:
         self.events: List[RebalanceEvent] = []
         self._hierarchy = None
         self._groups: List[np.ndarray] = []  # row-index arrays per scope group
-        self._envelopes: List[float] = []
+        self._group_nodes: List[int] = []  # hierarchy node owning each group
         self._next_t: Optional[float] = None
 
     @property
@@ -245,33 +245,45 @@ class FleetController:
     def bind(self, hierarchy) -> None:
         """Attach the fleet's budget hierarchy (a
         :class:`~repro.core.hierarchy.PowerHierarchy`; called by
-        FleetSimulator). The scope envelopes are frozen here, from the
-        *initial* budgets — rebalancing moves watts inside the envelope,
-        never grows it (under ``scope="tree"`` only the *root* envelope is
-        frozen; interior envelopes are re-divided recursively). Binding
-        resets the controller's schedule and event log, so one controller
-        instance reused across fleets starts each run fresh."""
+        FleetSimulator). Scope groups are fixed here, but each group's
+        envelope is read *live* from its owning node's budget on every pass:
+        rebalancing never changes those budgets under a flat scope (so this
+        is bit-identical to the old frozen-at-bind envelopes on healthy
+        fleets, tier-1-asserted), but a chaos-engine derate does — the
+        controller must re-divide the watts actually deliverable *now*, not
+        the watts provisioning promised. Under ``scope="tree"`` only the
+        root envelope is read; interior envelopes are re-divided
+        recursively. Binding resets the controller's schedule and event
+        log, so one controller instance reused across fleets starts each
+        run fresh."""
         self._next_t = None
         self.events = []
         self._hierarchy = hierarchy
         if self.scope == "rack":
             self._groups = [hierarchy.subtree_leaves(p)
                             for p in hierarchy.leaf_parents]
-            self._envelopes = [float(hierarchy.node_budget_w[p])
-                               for p in hierarchy.leaf_parents]
+            self._group_nodes = [int(p) for p in hierarchy.leaf_parents]
         elif self.scope == "cluster":
             self._groups = [np.arange(hierarchy.n_leaves)]
-            self._envelopes = [hierarchy.root_budget_w]
+            self._group_nodes = [hierarchy.root]
         else:  # tree: recursion walks the hierarchy itself
             self._groups = []
-            self._envelopes = []
+            self._group_nodes = []
 
     def _settle(self, target: np.ndarray, before_g: np.ndarray,
-                envelope: float) -> np.ndarray:
+                envelope: float,
+                caps: Optional[np.ndarray] = None) -> np.ndarray:
         """Floor, low-pass, and exactly re-normalize one division of
         ``envelope`` across a sibling group (rows of a rack, racks of a PDU
-        set, ...). Conservation against the envelope is asserted here, so
-        every node division in every scope is checked."""
+        set, ...). ``caps`` are the group's physical capacity ceilings
+        (``PowerHierarchy.node_cap_w``, +inf when healthy): a chaos-derated
+        member never receives more than its hardware can deliver, and the
+        clipped watts go to siblings with headroom instead. Conservation
+        against the envelope is asserted here, so every node division in
+        every scope is checked; only a group capped *in its entirety* below
+        the envelope may fall short (the shortfall is physically stranded —
+        simultaneous sibling derates — and shows up in
+        ``conservation_errors``)."""
         n = len(before_g)
         floor = self.min_share * envelope / n
         stepped = before_g + self.alpha * (np.maximum(target, floor)
@@ -285,9 +297,43 @@ class FleetController:
             new = floor + slack * (budget_slack / total_slack)
         else:
             new = np.full(n, envelope / n)
-        assert abs(float(new.sum()) - envelope) <= CONSERVATION_ATOL, \
-            (f"rebalance broke conservation: group sum "
-             f"{float(new.sum()):.6f} != envelope {envelope:.6f}")
+        if caps is not None and bool(np.any(new > caps)):
+            new = self._clamp_to_caps(new, np.asarray(caps, float),
+                                      envelope, floor)
+        total = float(new.sum())
+        assert total <= envelope + CONSERVATION_ATOL, \
+            (f"rebalance broke conservation: group sum {total:.6f} "
+             f"> envelope {envelope:.6f}")
+        assert (total >= envelope - CONSERVATION_ATOL
+                or (caps is not None
+                    and bool(np.all(new >= caps - CONSERVATION_ATOL)))), \
+            (f"rebalance broke conservation: group sum {total:.6f} != "
+             f"envelope {envelope:.6f} with capacity headroom left")
+        return new
+
+    @staticmethod
+    def _clamp_to_caps(new: np.ndarray, caps: np.ndarray, envelope: float,
+                       floor: float) -> np.ndarray:
+        """Clip each member to its capacity cap and hand the clipped watts
+        to siblings with headroom (proportional to remaining headroom, or to
+        current size among uncapped members), iterating to a fixed point —
+        each round pins at least one more member at its cap, so the loop is
+        bounded by the group size."""
+        new = np.minimum(new, caps)
+        for _ in range(len(new)):
+            deficit = envelope - float(new.sum())
+            if deficit <= CONSERVATION_ATOL:
+                break
+            head = caps - new
+            open_ = head > CONSERVATION_ATOL
+            if not bool(open_.any()):
+                break  # every member pinned at a finite cap: watts stranded
+            if bool(np.isinf(head[open_]).any()):
+                weight = np.where(np.isinf(head), np.maximum(new, floor), 0.0)
+            else:
+                weight = np.where(open_, head, 0.0)
+            new = np.minimum(new + deficit * weight / float(weight.sum()),
+                             caps)
         return new
 
     def _tree_divide(self, demand_leaf: np.ndarray,
@@ -309,7 +355,8 @@ class FleetController:
             kids = h.children[i]
             envelope = float(node_after[i])
             if len(kids) < 2:
-                node_after[kids] = envelope  # an only child inherits it all
+                # an only child inherits it all, up to its capacity cap
+                node_after[kids] = np.minimum(envelope, h.node_cap_w[kids])
                 continue
             target = self.policy.target_budgets(node_demand[kids], cur[kids],
                                                 envelope)
@@ -320,7 +367,8 @@ class FleetController:
             else:
                 target = cur[kids]  # rescale shares to the moved envelope
             node_after[kids] = self._settle(np.asarray(target, float),
-                                            cur[kids], envelope)
+                                            cur[kids], envelope,
+                                            caps=h.node_cap_w[kids])
         return node_after if any_target else None
 
     def maybe_rebalance(self, t: float, rows, row_w: np.ndarray,
@@ -349,14 +397,19 @@ class FleetController:
             after = node_after[:h.n_leaves].copy()
         else:
             after = before.copy()
-            for idx, envelope in zip(self._groups, self._envelopes):
+            for idx, node in zip(self._groups, self._group_nodes):
                 if len(idx) < 2:
                     continue  # a one-row group has nothing to trade
+                # live envelope: flat scopes never move interior budgets,
+                # but a chaos-engine derate does — divide what the node can
+                # actually deliver now
+                envelope = float(h.node_budget_w[node])
                 target = self.policy.target_budgets(demand[idx], before[idx],
                                                     envelope)
                 if target is None:
                     continue
-                after[idx] = self._settle(target, before[idx], envelope)
+                after[idx] = self._settle(target, before[idx], envelope,
+                                          caps=h.node_cap_w[idx])
         moved_w = float(np.abs(after - before).sum()) / 2.0
         if moved_w <= self.deadband_w:
             return None

@@ -30,6 +30,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.chaos.injector import ChaosInjector, FaultRecord
 from repro.core.hierarchy import PowerHierarchy
 from repro.core.simulator import Request, RowSimulator, SimConfig, SimResult
 from repro.core.slo import LatencyStats
@@ -91,10 +92,19 @@ class FleetResult:
     node_power_frac: np.ndarray = field(default=None, repr=False)  # [T, N]
     node_budget_w: np.ndarray = field(default=None, repr=False)  # [T, N]
     node_names: tuple = ()
+    # chaos-engine audit (empty without an injector): every applied fault
+    # phase with full before/after node budgets (chaos.injector.FaultRecord),
+    # and the per-tick row-liveness mask crashes/revivals toggled
+    fault_events: List[FaultRecord] = field(default_factory=list, repr=False)
+    row_alive: np.ndarray = field(default=None, repr=False)  # [T, R] bool
 
     @property
     def n_rebalances(self) -> int:
         return len(self.rebalances)
+
+    @property
+    def n_fault_events(self) -> int:
+        return len(self.fault_events)
 
     def budget_moved_w(self) -> float:
         """Total watts of budget the controller moved over the run."""
@@ -130,6 +140,14 @@ def as_sim_result(fres: FleetResult) -> SimResult:
     lat = LatencyStats(
         hp_impacts=[x for rr in fres.row_results for x in rr.latency.hp_impacts],
         lp_impacts=[x for rr in fres.row_results for x in rr.latency.lp_impacts])
+    # fleet-level brake state: any row braked at that sample (rows share the
+    # telemetry grid, but a revived row can have a ragged tail — skip then)
+    braked = [rr.braked_series for rr in fres.row_results]
+    if braked and all(b is not None and len(b) == len(braked[0])
+                      for b in braked):
+        braked_series = np.any(np.stack(braked), axis=0)
+    else:
+        braked_series = None
     return SimResult(
         latency=lat,
         n_brakes=fres.n_brakes,
@@ -140,6 +158,7 @@ def as_sim_result(fres: FleetResult) -> SimResult:
         mean_power_frac=fres.mean_cluster_frac,
         power_t=fres.power_t,
         power_w=fres.cluster_power_frac,
+        braked_series=braked_series,
         latencies=fres.merged_latencies(),
         cap_events=sum(rr.cap_events for rr in fres.row_results),
         queue_delays=fres.merged_queue_delays(),
@@ -165,7 +184,8 @@ class FleetSimulator:
                  cluster_budget_w: Optional[float] = None,
                  telemetry_s: Optional[float] = None,
                  controller: Optional[FleetController] = None,
-                 hierarchy: Optional[PowerHierarchy] = None):
+                 hierarchy: Optional[PowerHierarchy] = None,
+                 chaos: Optional[ChaosInjector] = None):
         if not rows:
             raise ValueError("FleetSimulator needs at least one row")
         from repro.experiments.cluster import resolve_row_hierarchy
@@ -190,6 +210,18 @@ class FleetSimulator:
                                             horizon_s=rows[0].cfg.oob_latency_s)
                             if need_fc else None)
         self._forecast_frac: Optional[np.ndarray] = None  # [R], one-tick-stale
+
+        # chaos engine: the injector rides the tick lockstep (polled after
+        # the controller's pass) and toggles row_alive on crash/revive. The
+        # mask gates *dispatch only*: dead rows drain their in-flight work
+        # and keep reporting telemetry (a crashed row still draws power
+        # until it winds down).
+        self.row_alive = np.ones(len(rows), dtype=bool)
+        self._any_dead = False
+        self._alive_samples: List[np.ndarray] = []
+        self.chaos = chaos
+        if chaos is not None:
+            chaos.bind(self)  # validates the timeline before anything runs
 
         self.decisions: List[RoutingDecision] = []
         self.n_shed: Dict[str, int] = {"high": 0, "low": 0}
@@ -246,6 +278,12 @@ class FleetSimulator:
         return FleetView(t=t, cluster_frac=self._stale_cluster_frac,
                          n_braked=n_braked)
 
+    def set_row_alive(self, i: int, alive: bool) -> None:
+        """Fence (or unfence) row ``i`` from dispatch — the chaos engine's
+        crash/revive primitive. Idempotent; budgets are untouched."""
+        self.row_alive[int(i)] = bool(alive)
+        self._any_dead = not bool(self.row_alive.all())
+
     def _dispatch(self, req: Request):
         # rows are current as of req.t_arrival (the driver advances them to
         # the arrival instant before routing)
@@ -256,9 +294,24 @@ class FleetSimulator:
                 req.rid, req.t_arrival, req.wl, req.priority, -1,
                 f"shed/{self.admission.name}"))
             return
-        # state-blind routers skip the per-pool snapshot scans entirely
-        views = ([self._view(i, req) for i in range(len(self.rows))]
-                 if self.router.needs_views else self._blind_views)
+        if self._any_dead:
+            # crashed rows are invisible to the router; with none left the
+            # arrival is shed (counted, so admitted + shed == offered holds
+            # through any outage)
+            alive = [i for i in range(len(self.rows)) if self.row_alive[i]]
+            if not alive:
+                self.n_shed[req.priority] = self.n_shed.get(req.priority, 0) + 1
+                self.decisions.append(RoutingDecision(
+                    req.rid, req.t_arrival, req.wl, req.priority, -1,
+                    "shed/row-crash"))
+                return
+            views = ([self._view(i, req) for i in alive]
+                     if self.router.needs_views
+                     else [self._blind_views[i] for i in alive])
+        else:
+            # state-blind routers skip the per-pool snapshot scans entirely
+            views = ([self._view(i, req) for i in range(len(self.rows))]
+                     if self.router.needs_views else self._blind_views)
         row, reason = self.router.route(req, views)
         self.decisions.append(RoutingDecision(
             req.rid, req.t_arrival, req.wl, req.priority, row, reason))
@@ -318,6 +371,13 @@ class FleetSimulator:
                     # actuation delay, like every other control-plane path)
                     self.controller.maybe_rebalance(self._next_tick, self.rows,
                                                     row_w, fc_w)
+                if self.chaos is not None:
+                    # faults land between ticks too, after the controller's
+                    # pass: the control plane always acts on pre-fault state
+                    # and discovers the fault at the next sample — the same
+                    # actuation delay a real OOB plane has
+                    self.chaos.poll(self._next_tick, self)
+                    self._alive_samples.append(self.row_alive.copy())
                 self._prev_row_w = row_w
                 self._next_tick += self.telemetry_s
         return not (self._i >= len(self.requests)
@@ -370,6 +430,10 @@ class FleetSimulator:
             node_power_frac=node_frac,
             node_budget_w=node_budget,
             node_names=h.names,
+            fault_events=(list(self.chaos.records)
+                          if self.chaos is not None else []),
+            row_alive=(np.stack(self._alive_samples)
+                       if self._alive_samples else None),
         )
 
     def run(self) -> FleetResult:
@@ -415,6 +479,15 @@ def build_fleet(scenario, workloads, shares, server,
     capping-impact-only baseline, fleet-shaped. References never carry a
     controller or a shaped hierarchy: with nothing capped there is no
     headroom to move, and the baseline must isolate power-management impact.
+
+    A scenario carrying a :class:`~repro.chaos.faults.FaultSpec`
+    (``Scenario.faults``) gets a fresh
+    :class:`~repro.chaos.injector.ChaosInjector` riding the tick lockstep
+    (fresh per fleet — Monte-Carlo members must not share actuation state;
+    the timeline is validated here, before anything runs). References carry
+    only the row-crash/revive subset: a crash is an environmental capacity
+    loss both twins must see, while budget derates are power-plane events
+    the uncapped baseline by definition doesn't have.
     """
     from repro.core.policy import NoCap
     from repro.experiments.runner import row_sim
@@ -448,6 +521,11 @@ def build_fleet(scenario, workloads, shares, server,
     cspec = getattr(scenario, "controller", None)
     controller = (build_controller(cspec)
                   if cspec is not None and not reference else None)
+    fspec = getattr(scenario, "faults", None)
+    if fspec is not None and reference:
+        fspec = fspec.routing_only()
+    chaos = (ChaosInjector(fspec)
+             if fspec is not None and not fspec.is_noop else None)
     return FleetSimulator(
         rows, requests,
         router=build_router(spec.router, spec.params),
@@ -455,4 +533,5 @@ def build_fleet(scenario, workloads, shares, server,
         rows_per_rack=fleet.rows_per_rack,
         telemetry_s=scenario.telemetry.telemetry_s,
         controller=controller,
-        hierarchy=hierarchy)
+        hierarchy=hierarchy,
+        chaos=chaos)

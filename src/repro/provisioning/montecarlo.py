@@ -38,6 +38,15 @@ controller (DESIGN.md §11); their uncapped reference twins never do, so the
 SLO gate still isolates power-management impact. That is what lets
 ``plan_capacity`` (and ``plan_controller_comparison``) quantify how much
 safe oversubscription rebalancing buys back.
+
+Fault timelines ride along for free: a base scenario carrying
+``Scenario.faults`` propagates it to every member through
+:meth:`EnsembleSpec.member_scenarios` (``with_`` copies the field), and
+``build_fleet`` constructs a **fresh** ``ChaosInjector`` per member fleet —
+no actuation state is shared across members or workers, so faulted
+ensembles remain worker-count-invariant and bit-reproducible (asserted in
+``tests/test_chaos.py``). That per-member injection is what
+``RiskConstraints.survive`` builds the planner's survivability gate on.
 """
 
 from __future__ import annotations

@@ -10,7 +10,14 @@ the largest fleet whose ensemble satisfies the risk constraints:
 * ``max_brake_prob`` — bound on P[a traffic realization triggers >= 1
   hardware powerbrake] (the paper plans for zero);
 * ``max_slo_violation_prob`` — bound on P[a realization misses the Table-5
-  latency SLOs] (percentile gates from ``core.slo``).
+  latency SLOs] (percentile gates from ``core.slo``);
+* ``survive`` — a chaos fault timeline (``repro.chaos.FaultSpec``) the plan
+  must *ride through*: every probe additionally runs the candidate fleet
+  with the timeline injected and gates on ``max_fault_brake_prob`` /
+  ``max_fault_brakes``. This prices k-failure survivability — "how much
+  oversubscription can I keep if a PDU dies at peak" — instead of planning
+  for the fault-free best case. Injecting a fault only removes capacity, so
+  feasibility stays monotone in fleet size and bisection stays sound.
 
 SLO impacts are measured the way the paper measures them: each member diffs
 per-request latencies against an uncapped reference run on the same trace
@@ -29,6 +36,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
+from repro.chaos.faults import FaultSpec
 from repro.core.slo import DEFAULT_SLO, SLO, meets_slo
 from repro.experiments.scenario import Scenario
 from repro.provisioning.montecarlo import (
@@ -49,12 +57,25 @@ class RiskConstraints:
     brake-feasible while its powerbrake count stays <= ``max_brakes`` (0
     keeps the paper's zero-tolerance), and ``max_brake_prob`` bounds the
     probability of exceeding that budget. Loosening either admits larger
-    fleets (planner-monotonicity is tier-1-asserted)."""
+    fleets (planner-monotonicity is tier-1-asserted).
+
+    ``survive`` adds a survivability gate: when set, every probe also runs
+    the candidate fleet with that fault timeline injected (same seeds, same
+    pinned budget) and requires P[faulted member exceeds
+    ``max_fault_brakes``] <= ``max_fault_brake_prob``. The defaults demand
+    the paper's zero-tolerance *under the fault* — the difference between
+    the fault-free and surviving ``safe_added_servers`` is the
+    oversubscription cost of k-failure survivability. SLO gates stay on the
+    fault-free ensemble: a derated fleet is expected to shed/slow, the
+    survivability question is whether the hardware brake ever fires."""
 
     max_brake_prob: float = 0.0  # P[member exceeds the brake budget]
     max_brakes: int = 0  # brakes tolerated per realization/horizon
     max_slo_violation_prob: float = 0.0  # P[member misses the SLO]
     slo: SLO = DEFAULT_SLO
+    survive: Optional[FaultSpec] = None  # fault timeline the plan must ride through
+    max_fault_brake_prob: float = 0.0  # P[faulted member exceeds fault budget]
+    max_fault_brakes: int = 0  # brakes tolerated per faulted realization
 
 
 @dataclass
@@ -67,6 +88,7 @@ class PlanPoint:
     brake_prob: float
     slo_violation_prob: float
     peak_frac_max: float
+    fault_brake_prob: Optional[float] = None  # survivability gate (survive set)
     ensemble: Optional[EnsembleResult] = field(default=None, repr=False)
 
 
@@ -122,6 +144,14 @@ def plan_capacity(base: Scenario, *,
     against the same baseline-calibrated envelope).
     """
     n_prov = base.fleet.n_provisioned
+    survive = constraints.survive
+    if survive is not None and survive.is_noop:
+        survive = None
+    if survive is not None and base.routing is None:
+        raise ValueError(
+            f"RiskConstraints.survive needs a routed-fleet scenario (the "
+            f"chaos engine rides the FleetSimulator); {base.name!r} has no "
+            f"RoutingSpec")
     budget = resolve_ensemble_budget(base) if budget_w is None else float(budget_w)
     probes: List[PlanPoint] = []
 
@@ -133,12 +163,25 @@ def plan_capacity(base: Scenario, *,
                            budget_w=budget)
         brake_p = ens.brake_prob(constraints.max_brakes)
         slo_p = _violation_prob(ens, constraints.slo)
+        fault_p: Optional[float] = None
+        if survive is not None:
+            # same seeds + pinned budget, fault timeline injected: the only
+            # difference vs `ens` is the fault, so the gate isolates it. No
+            # reference twins — the gate is brake-only.
+            fens = run_ensemble(
+                EnsembleSpec(sc.with_(faults=survive), n_seeds=n_seeds,
+                             seed0=seed0, n_workers=n_workers),
+                budget_w=budget)
+            fault_p = fens.brake_prob(constraints.max_fault_brakes)
         pt = PlanPoint(
             added_servers=k, added_frac=k / n_prov,
             feasible=(brake_p <= constraints.max_brake_prob + _EPS
-                      and slo_p <= constraints.max_slo_violation_prob + _EPS),
+                      and slo_p <= constraints.max_slo_violation_prob + _EPS
+                      and (fault_p is None
+                           or fault_p <= constraints.max_fault_brake_prob + _EPS)),
             brake_prob=brake_p, slo_violation_prob=slo_p,
             peak_frac_max=float(ens.peak_fracs.max()) if len(ens.peak_fracs) else 0.0,
+            fault_brake_prob=fault_p,
             ensemble=ens if keep_ensembles else None)
         probes.append(pt)
         return pt

@@ -18,7 +18,13 @@ the same control logic a multi-host launcher would run per pod:
 
 POLCA interaction: a powerbrake event is fleet-visible; the supervisor treats
 sustained brakes like stragglers (checkpoint + drain) — wired via the
-``on_power_event`` hook.
+``on_power_event`` hook. :class:`BrakeSentinel` closes the loop from real
+telemetry: it scans the ``braked_series`` a sim/fleet run records (or
+observes live samples) and turns N consecutive braked ticks into one
+``"sustained-brake"`` event; delivering that to
+:meth:`TrainSupervisor.power_event` checkpoints and drains the run at the
+next step boundary (training on a braked row wastes power-capped cycles —
+better to checkpoint and let the launcher reschedule).
 """
 
 from __future__ import annotations
@@ -62,11 +68,32 @@ class TrainSupervisor:
 
     n_restarts: int = 0
     history: List[Dict] = field(default_factory=list)
+    power_events: List[str] = field(default_factory=list)
+    _drain_requested: bool = field(default=False, repr=False)
+
+    def power_event(self, event: str) -> None:
+        """Deliver a fleet power-plane signal (typically a
+        :class:`BrakeSentinel` ``"sustained-brake"``). Every event is
+        recorded and forwarded to the ``on_power_event`` callback; a
+        sustained brake additionally requests checkpoint + drain — the run
+        loop saves and returns at the next step boundary, the same
+        mitigation stragglers get."""
+        self.power_events.append(event)
+        if self.on_power_event is not None:
+            self.on_power_event(event)
+        if event == "sustained-brake":
+            self._drain_requested = True
 
     def run(self, state, n_steps: int, start_step: int = 0,
             place_batch: Callable = None):
         step = start_step
         while step < n_steps:
+            if self._drain_requested:
+                # sustained powerbrake: checkpoint and hand control back to
+                # the launcher (drain), exactly like straggler mitigation
+                self._drain_requested = False
+                checkpointer.save(self.ckpt_dir, step, state)
+                return state, step
             try:
                 batch = self.pipeline.batch_at(step)
                 if place_batch is not None:
@@ -101,6 +128,52 @@ class FaultInjector:
         if step in self.fail_at and step not in self.seen:
             self.seen.add(step)
             raise RuntimeError(f"injected fault at step {step}")
+
+    def reset(self) -> None:
+        """Forget which steps already fired, so one injector can drive
+        repeated supervisor runs (each run re-injects the same timeline)."""
+        self.seen.clear()
+
+
+@dataclass
+class BrakeSentinel:
+    """Turns row brake telemetry into supervisor power events: N
+    consecutive braked telemetry samples constitute one sustained brake
+    (one 2 s blip is the brake doing its job; ``sustain_ticks`` of them
+    means the row is pinned at the brake floor and training there is
+    wasted). Feed live samples through :meth:`observe`, or scan a finished
+    run's recorded series (``SimResult.braked_series``, also produced by
+    ``fleet.as_sim_result``) with :meth:`scan`."""
+
+    sustain_ticks: int = 3
+    events: List[float] = field(default_factory=list)
+    _run_len: int = field(default=0, repr=False)
+
+    def observe(self, t: float, braked: bool) -> Optional[str]:
+        """One telemetry sample. Returns ``"sustained-brake"`` on the
+        sample that completes a run of ``sustain_ticks`` braked ticks
+        (once per run — a longer brake does not re-fire)."""
+        self._run_len = self._run_len + 1 if braked else 0
+        if self._run_len == self.sustain_ticks:
+            self.events.append(float(t))
+            return "sustained-brake"
+        return None
+
+    def scan(self, result, supervisor=None) -> List[float]:
+        """Scan a finished run's ``braked_series`` on its ``power_t`` grid.
+        Returns the sustained-brake times; with ``supervisor`` given, each
+        event is also delivered to ``supervisor.power_event`` (the
+        checkpoint+drain wiring)."""
+        fired: List[float] = []
+        if result.braked_series is None:
+            return fired
+        for t, b in zip(result.power_t, result.braked_series):
+            ev = self.observe(float(t), bool(b))
+            if ev is not None:
+                fired.append(float(t))
+                if supervisor is not None:
+                    supervisor.power_event(ev)
+        return fired
 
 
 def elastic_reshard(state_template_fn: Callable[[Any], Any], host_state: Any,

@@ -1,0 +1,278 @@
+"""Chaos engine: injectable fault timelines against the routed fleet
+(DESIGN.md §13).
+
+Covers the subsystem contract end to end: spec-time and bind-time
+validation, no-op bit-parity with the pre-chaos fleets, per-tick budget
+conservation through node derates, exact root-envelope round-trips,
+crash -> revive accounting, fixed-seed determinism, Monte-Carlo
+worker-invariance with fault timelines, and the planner's survivability
+gate."""
+
+import numpy as np
+import pytest
+
+from repro.chaos import ChaosInjector, FaultEvent, FaultSpec
+from repro.experiments import (
+    CHAOS_SCENARIO_FAMILY,
+    ControllerSpec,
+    FleetSpec,
+    HierarchySpec,
+    PolicySpec,
+    RoutingSpec,
+    Scenario,
+    TrafficSpec,
+    get_scenario,
+    run_experiment,
+)
+from repro.provisioning import EnsembleSpec, run_ensemble
+from repro.provisioning.planner import RiskConstraints, plan_capacity
+
+
+def _chaos_scenario(faults=None, **kw) -> Scenario:
+    base = dict(
+        name="chaos-test",
+        duration_s=1500.0,
+        fleet=FleetSpec(n_provisioned=16, added_frac=0.25, n_rows=8),
+        policy=PolicySpec("polca"),
+        traffic=TrafficSpec(occ_peak=0.9),
+        routing=RoutingSpec("cap-aware"),
+        controller=ControllerSpec("predictive", interval_s=30.0, scope="tree"),
+        hierarchy=HierarchySpec(shape=(2, 2, 2)),
+        budget="nominal",
+        compare_to_reference=False,
+        faults=faults,
+    )
+    base.update(kw)
+    return Scenario(**base)
+
+
+# ------------------------------------------------------------- validation
+def test_fault_spec_structural_validation():
+    with pytest.raises(ValueError, match="unknown kind"):
+        FaultSpec((FaultEvent("meteor-strike", t=10.0),))
+    with pytest.raises(ValueError, match="factor"):
+        FaultSpec((FaultEvent("node-derate", t=10.0, node="pdu0",
+                              factor=1.5),))
+    with pytest.raises(ValueError, match="until"):
+        FaultSpec((FaultEvent("node-derate", t=100.0, node="pdu0",
+                              factor=0.8, until=50.0),))
+    with pytest.raises(ValueError, match="node"):
+        FaultSpec((FaultEvent("node-derate", t=10.0, factor=0.8),))
+    with pytest.raises(ValueError, match="row"):
+        FaultSpec((FaultEvent("row-crash", t=10.0),))
+    with pytest.raises(ValueError, match="node"):
+        FaultSpec((FaultEvent("row-crash", t=10.0, row=0, node="pdu0"),))
+
+
+def test_bind_time_validation_names_the_offending_event():
+    """Events beyond the trace or naming nonexistent hierarchy nodes fail
+    at fleet construction, before any simulation runs."""
+    with pytest.raises(ValueError, match="duration"):
+        run_experiment(_chaos_scenario(
+            FaultSpec((FaultEvent("row-crash", t=99999.0, row=0),))))
+    with pytest.raises(ValueError, match="no-such-node"):
+        run_experiment(_chaos_scenario(
+            FaultSpec((FaultEvent("node-derate", t=100.0,
+                                  node="no-such-node", factor=0.8),))))
+    with pytest.raises(ValueError, match="row"):
+        run_experiment(_chaos_scenario(
+            FaultSpec((FaultEvent("row-crash", t=100.0, row=99),))))
+
+
+def test_faults_require_routing():
+    sc = _chaos_scenario(
+        FaultSpec((FaultEvent("row-crash", t=100.0, row=0),)),
+        routing=None, controller=None, hierarchy=None)
+    with pytest.raises(ValueError, match="RoutingSpec"):
+        run_experiment(sc)
+
+
+def test_routing_only_keeps_row_events():
+    fs = FaultSpec((FaultEvent("row-crash", t=100.0, row=0),
+                    FaultEvent("node-derate", t=200.0, node="pdu0",
+                               factor=0.8),
+                    FaultEvent("row-revive", t=300.0, row=0)))
+    ro = fs.routing_only()
+    assert [e.kind for e in ro.events] == ["row-crash", "row-revive"]
+    assert FaultSpec().routing_only().is_noop
+
+
+def test_chaos_family_registered_and_serializable():
+    for name in CHAOS_SCENARIO_FAMILY:
+        sc = get_scenario(name)
+        assert sc.routing is not None and sc.faults is not None
+        assert Scenario.from_json(sc.to_json()) == sc
+    assert get_scenario("chaos-noop").faults.is_noop
+    assert not get_scenario("chaos-row-crash").faults.is_noop
+
+
+# ------------------------------------------------------------- bit parity
+def test_noop_fault_spec_bit_parity_with_pr5_fleet():
+    """Acceptance: a registered chaos-* scenario with an empty FaultSpec is
+    bit-identical to its pre-chaos counterpart."""
+    noop = run_experiment(get_scenario("chaos-noop").with_(
+        duration_s=1800.0, compare_to_reference=False))
+    site = run_experiment(get_scenario("site-static").with_(
+        duration_s=1800.0, compare_to_reference=False))
+    assert noop.result.latencies == site.result.latencies
+    assert noop.fleet.decisions == site.fleet.decisions
+    assert np.array_equal(noop.fleet.cluster_power_frac,
+                          site.fleet.cluster_power_frac)
+    assert np.array_equal(noop.fleet.node_budget_w, site.fleet.node_budget_w)
+    assert noop.fleet.fault_events == []
+
+
+# -------------------------------------------------- derates: conservation
+_DERATE = FaultSpec((FaultEvent("node-derate", t=300.0, node="pdu0",
+                                factor=0.7, until=1200.0),))
+
+
+def test_derate_conserves_every_node_and_restores_root_exactly():
+    o = run_experiment(_chaos_scenario(_DERATE))
+    f = o.fleet
+    h = _chaos_scenario().hierarchy.build(np.ones(8))
+    # per-tick conservation at every interior node, through apply+restore
+    for i in range(h.n_leaves, h.n_nodes):
+        kids = h.children[i]
+        assert np.allclose(f.node_budget_w[:, kids].sum(axis=1),
+                           f.node_budget_w[:, i], atol=1e-3)
+    root = f.node_budget_w[:, h.root]
+    assert float(root.min()) < float(root[0]) - 1.0, \
+        "the derate must shrink the root (the watts are physically lost)"
+    assert abs(float(root[-1]) - float(root[0])) < 1e-6, \
+        "restore must return the tracked delta exactly"
+    phases = [(r.kind, r.phase) for r in f.fault_events]
+    assert ("node-derate", "apply") in phases
+    assert ("node-derate", "restore") in phases
+    for r in f.fault_events:
+        assert r.node_budgets_before_w is not None
+        assert r.node_budgets_after_w is not None
+
+
+def test_ramp_derate_is_monotone_then_restores():
+    fs = FaultSpec((FaultEvent("node-derate", t=300.0, node="pdu0",
+                               factor=0.7, until=1200.0, ramp_s=300.0),))
+    o = run_experiment(_chaos_scenario(
+        fs, controller=ControllerSpec("static")))
+    f = o.fleet
+    names = list(f.node_names)
+    col = f.node_budget_w[:, names.index("pdu0")]
+    t = f.power_t
+    ramp = col[(t >= 300.0) & (t <= 600.0)]
+    assert np.all(np.diff(ramp) <= 1e-9), "ramp must be non-increasing"
+    hold = col[(t > 650.0) & (t < 1200.0)]
+    assert np.allclose(hold, col[0] * 0.7, rtol=1e-6)
+    assert abs(float(col[-1]) - float(col[0])) < 1e-6
+
+
+def test_derated_node_cap_respected_under_tree_rebalancing():
+    """The controller must not 'heal' the fault: while the derate holds, the
+    derated node's budget stays at/below its physical cap even as tree-scope
+    passes re-divide the site."""
+    o = run_experiment(_chaos_scenario(_DERATE))
+    f = o.fleet
+    assert f.n_rebalances > 0
+    names = list(f.node_names)
+    col = f.node_budget_w[:, names.index("pdu0")]
+    t = f.power_t
+    cap = float(col[0]) * 0.7
+    inside = col[(t > 310.0) & (t <= 1200.0)]
+    assert np.all(inside <= cap + 1e-6)
+
+
+# ----------------------------------------------------- crash -> revive
+_CRASH = FaultSpec((FaultEvent("row-crash", t=400.0, row=3),
+                    FaultEvent("row-revive", t=1100.0, row=3)))
+
+
+def test_crash_revive_round_trip_and_accounting():
+    o = run_experiment(_chaos_scenario(_CRASH))
+    f = o.fleet
+    assert f.n_offered == f.n_admitted + f.n_shed_total
+    during = [d for d in f.decisions if d.row == 3 and 400.0 < d.t <= 1100.0]
+    after = [d for d in f.decisions if d.row == 3 and d.t > 1100.0]
+    assert during == [], "no dispatch may reach a dead row"
+    assert len(after) > 0, "the revived row must re-enter service"
+    assert f.row_alive is not None
+    dead = ~f.row_alive[:, 3]
+    assert dead.any() and not dead.all()
+    others = np.delete(f.row_alive, 3, axis=1)
+    assert bool(others.all()), "only the crashed row may go dead"
+    kinds = [(r.kind, r.phase) for r in f.fault_events]
+    assert ("row-crash", "apply") in kinds
+    assert ("row-revive", "apply") in kinds
+
+
+def test_all_rows_dead_sheds_with_reason():
+    fs = FaultSpec(tuple(
+        [FaultEvent("row-crash", t=400.0, row=i) for i in range(8)]
+        + [FaultEvent("row-revive", t=800.0, row=i) for i in range(8)]))
+    o = run_experiment(_chaos_scenario(fs))
+    f = o.fleet
+    assert f.n_offered == f.n_admitted + f.n_shed_total
+    reasons = {d.reason for d in f.decisions if d.reason.startswith("shed")}
+    assert "shed/row-crash" in reasons
+
+
+# ------------------------------------------------------------ determinism
+def test_chaos_determinism_under_fixed_seed():
+    a = run_experiment(_chaos_scenario(_DERATE))
+    b = run_experiment(_chaos_scenario(_DERATE))
+    assert a.result.latencies == b.result.latencies
+    assert a.fleet.fault_events == b.fleet.fault_events
+    assert np.array_equal(a.fleet.node_budget_w, b.fleet.node_budget_w)
+    c = run_experiment(_chaos_scenario(_DERATE, seed=8))
+    assert a.result.latencies != c.result.latencies, "seed must matter"
+
+
+def test_faulted_ensemble_worker_invariance():
+    """Fault timelines ride per member with a fresh injector each: results
+    are bit-identical across Monte-Carlo worker counts."""
+    base = _chaos_scenario(_CRASH, duration_s=1200.0)
+    e1 = run_ensemble(EnsembleSpec(base, n_seeds=2, seed0=900, n_workers=1))
+    e2 = run_ensemble(EnsembleSpec(base, n_seeds=2, seed0=900, n_workers=2))
+    assert np.array_equal(e1.brake_counts, e2.brake_counts)
+    for m1, m2 in zip(e1.members, e2.members):
+        assert m1.result.latencies == m2.result.latencies
+        assert np.array_equal(m1.result.power_w, m2.result.power_w)
+        assert m1.scenario.faults == base.faults
+
+
+# ------------------------------------------------------- injector re-use
+def test_injector_rebinds_fresh_state():
+    """bind() resets actuation state: one spec can drive many fleets (what
+    per-member Monte-Carlo construction relies on)."""
+    inj = ChaosInjector(_DERATE)
+    a = run_experiment(_chaos_scenario(_DERATE))
+    b = run_experiment(_chaos_scenario(_DERATE))
+    assert a.fleet.fault_events == b.fleet.fault_events
+    assert inj.records == []
+
+
+# --------------------------------------------------- planner survivability
+def test_planner_survivability_gate():
+    base = _chaos_scenario(None, duration_s=900.0,
+                           fleet=FleetSpec(n_provisioned=8, added_frac=0.0,
+                                           n_rows=4),
+                           hierarchy=HierarchySpec(shape=(2, 2)),
+                           traffic=TrafficSpec(occ_peak=0.62))
+    crash = FaultSpec((FaultEvent("row-crash", t=300.0, row=0),
+                       FaultEvent("row-crash", t=350.0, row=1),
+                       FaultEvent("row-revive", t=800.0, row=0),
+                       FaultEvent("row-revive", t=800.0, row=1)))
+    surv = plan_capacity(base, constraints=RiskConstraints(survive=crash),
+                         n_seeds=1, max_added_frac=0.5, n_workers=1)
+    assert all(p.fault_brake_prob is not None for p in surv.probes)
+    free = plan_capacity(base, n_seeds=1, max_added_frac=0.5, n_workers=1)
+    assert all(p.fault_brake_prob is None for p in free.probes)
+    assert surv.safe_added_servers <= free.safe_added_servers, \
+        "surviving a crash can never admit a larger fleet"
+    # a no-op timeline is the same as no gate at all
+    noop = plan_capacity(base,
+                         constraints=RiskConstraints(survive=FaultSpec()),
+                         n_seeds=1, max_added_frac=0.5, n_workers=1)
+    assert noop.safe_added_servers == free.safe_added_servers
+    with pytest.raises(ValueError, match="routed"):
+        plan_capacity(base.with_(routing=None, controller=None,
+                                 hierarchy=None),
+                      constraints=RiskConstraints(survive=crash), n_seeds=1)

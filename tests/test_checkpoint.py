@@ -17,7 +17,12 @@ from repro.models import model as model_mod
 from repro.models.config import ShapeConfig
 from repro.models.param import init_params
 from repro.optim import make_optimizer
-from repro.runtime.fault_tolerance import FaultInjector, StragglerMonitor, TrainSupervisor
+from repro.runtime.fault_tolerance import (
+    BrakeSentinel,
+    FaultInjector,
+    StragglerMonitor,
+    TrainSupervisor,
+)
 
 
 def _tiny_state():
@@ -93,6 +98,82 @@ def test_supervisor_crash_restart_replays_exactly(tmp_path, mesh1):
                     jax.tree.leaves(final_faulty["params"])):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_fault_injector_reset_reinjects():
+    inj = FaultInjector(fail_at=[2])
+    with pytest.raises(RuntimeError):
+        inj.maybe_fail(2)
+    inj.maybe_fail(2)  # already seen: silent
+    inj.reset()
+    with pytest.raises(RuntimeError):
+        inj.maybe_fail(2)  # same timeline fires again after reset
+
+
+class _CountingPipeline:
+    """Step-addressable stub: the supervisor only calls batch_at(step)."""
+
+    def batch_at(self, step):
+        return {"step": step}
+
+
+def test_supervisor_power_event_checkpoints_and_drains(tmp_path):
+    """A sustained-brake power event checkpoints the run and drains at the
+    next step boundary — the straggler mitigation, triggered by the power
+    plane. Other events are recorded + forwarded but do not drain."""
+    seen = []
+
+    def step_fn(state, batch):
+        n = int(state["x"])
+        if n == 3:
+            sup.power_event("sustained-brake")
+        return {"x": state["x"] + 1.0}, {"loss": 0.0}
+
+    sup = TrainSupervisor(step_fn, _CountingPipeline(), str(tmp_path),
+                          ckpt_interval=100, on_power_event=seen.append)
+    sup.power_event("brake-cleared")  # informational: no drain
+    state, step = sup.run({"x": np.asarray(0.0)}, 10)
+    assert step == 4, "drain must happen at the boundary after the event"
+    assert float(state["x"]) == 4.0
+    assert sup.power_events == ["brake-cleared", "sustained-brake"]
+    assert seen == sup.power_events, "on_power_event hook sees every event"
+    assert checkpointer.list_steps(str(tmp_path))[-1] == 4
+    # the drain is one-shot: resuming completes the run
+    state, step = sup.run(state, 10, start_step=step)
+    assert step == 10 and float(state["x"]) == 10.0
+
+
+def test_brake_sentinel_fires_on_sustained_runs_only():
+    s = BrakeSentinel(sustain_ticks=3)
+    pattern = [False, True, True, False, True, True, True, True]
+    fired = [s.observe(float(i), b) for i, b in enumerate(pattern)]
+    # one event, exactly at the 3rd consecutive braked tick; a longer run
+    # does not re-fire
+    assert fired == [None, None, None, None, None, None,
+                     "sustained-brake", None]
+    assert s.events == [6.0]
+
+
+def test_brake_sentinel_scan_real_telemetry_drains_supervisor(tmp_path):
+    """End to end: a row simulation braked by an undersized budget produces
+    a braked_series whose sustained run the sentinel converts into the
+    supervisor power event that checkpoints + drains the training loop."""
+    from repro.experiments import get_scenario, run_experiment
+
+    o = run_experiment(get_scenario("fig14-plus30").with_(
+        duration_s=900.0, budget=14_000.0, compare_to_reference=False))
+    assert o.result.braked_series is not None
+
+    def step_fn(state, batch):
+        return {"x": state["x"] + 1.0}, {"loss": 0.0}
+
+    sup = TrainSupervisor(step_fn, _CountingPipeline(), str(tmp_path))
+    fired = BrakeSentinel(sustain_ticks=3).scan(o.result, supervisor=sup)
+    assert fired, "an undersized budget must yield a sustained brake"
+    assert "sustained-brake" in sup.power_events
+    state, step = sup.run({"x": np.asarray(0.0)}, 5)
+    assert step == 0, "pending drain fires before the first step"
+    assert checkpointer.list_steps(str(tmp_path)) == [0]
 
 
 def test_straggler_monitor_flags_outliers():

@@ -46,6 +46,7 @@ def test_registry_docs_in_sync_with_registries():
 
 def test_registry_docs_cover_every_registered_name():
     import repro.provisioning  # noqa: F401  (registers the mc-* generators)
+    from repro.chaos import FAULT_EVENT_BUILDERS
     from repro.core.traces import list_occupancy_generators
     from repro.experiments.scenario import POLICY_BUILDERS
     from repro.fleet.controller import REBALANCE_BUILDERS
@@ -53,7 +54,7 @@ def test_registry_docs_cover_every_registered_name():
     with open(os.path.join(ROOT, "docs", "registries.md")) as fh:
         text = fh.read()
     for registry in (POLICY_BUILDERS, ROUTER_BUILDERS, ADMISSION_BUILDERS,
-                     REBALANCE_BUILDERS):
+                     REBALANCE_BUILDERS, FAULT_EVENT_BUILDERS):
         for name in registry:
             assert f"`{name}`" in text, f"registry entry {name!r} missing"
     for name in list_occupancy_generators():

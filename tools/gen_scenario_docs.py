@@ -3,10 +3,10 @@
 registries.
 
 Every named scenario (``table2-*``, ``fig*``, ``cluster-*``, ``mc-*``,
-``fleet-*``, ``fleet-rebalance-*``, ``site-*``) is rendered into one
-scenario reference table, and every pluggable-component registry — policies,
-routers, admission controllers, rebalance policies, occupancy generators —
-into a registry reference, so the docs cannot drift from the code: a tier-1
+``fleet-*``, ``fleet-rebalance-*``, ``site-*``, ``chaos-*``) is rendered
+into one scenario reference table, and every pluggable-component registry —
+policies, routers, admission controllers, rebalance policies, occupancy
+generators, chaos fault events — into a registry reference, so the docs cannot drift from the code: a tier-1
 test regenerates both files in memory and asserts they match what is checked
 in, and ``--check`` does the same from the command line (wired into
 ``tools/smoke.sh`` / CI).
@@ -50,8 +50,8 @@ import repro.provisioning  # registers the mc-* generator families
 outcome = run_experiment(get_scenario("fleet-rebalance-predictive"))
 ```
 
-| scenario | duration | fleet | traffic | policy | routing | controller | budget |
-|---|---|---|---|---|---|---|---|
+| scenario | duration | fleet | traffic | policy | routing | controller | budget | faults |
+|---|---|---|---|---|---|---|---|---|
 """
 
 FOOTER = """
@@ -67,6 +67,10 @@ pre-baked per-row traces). *controller* is the power-rebalancing policy
 per-rack default — its scope) for dynamically rebalanced fleets. *budget*
 is the row power envelope rule: `calibrated` (Table-2 79%-peak operating
 point), `nominal` (n_provisioned x server rating), or explicit watts.
+*faults* is the scenario's injected chaos timeline (`Scenario.faults`),
+one `kind@t` entry per `FaultEvent` (`none` marks an explicitly attached
+empty `FaultSpec` — the bit-parity anchor); empty means no fault engine at
+all.
 """
 
 REG_HEADER = """\
@@ -79,8 +83,9 @@ REG_HEADER = """\
 
 Every pluggable component is registered by name so scenarios stay
 JSON-serializable: a [`Scenario`](scenarios.md) names a policy, router,
-admission controller, rebalance policy, and occupancy generator, and the
-builders below construct fresh instances per run. The one-line summaries
+admission controller, rebalance policy, occupancy generator — and, for
+chaos scenarios, fault-event kinds — and the builders below construct
+fresh instances per run. The one-line summaries
 are the first line of each implementation's docstring.
 """
 
@@ -93,7 +98,10 @@ policies* re-divide power envelopes across the budget hierarchy
 (`ControllerSpec.kind`, with `scope` = `rack` | `cluster` | `tree` — the
 latter recursing over every interior node of the scenario's
 `HierarchySpec`). *occupancy generators* produce the seeded busy-server
-curves traffic is sampled from (`TrafficSpec.generator`).
+curves traffic is sampled from (`TrafficSpec.generator`). *fault events*
+are the `FaultEvent.kind` values a `FaultSpec` timeline may carry
+(`Scenario.faults`); the `ChaosInjector` applies them between telemetry
+ticks and logs every application to `FleetResult.fault_events`.
 """
 
 
@@ -155,6 +163,15 @@ def _fmt_budget(sc) -> str:
     return f"{sc.budget:.0f} W"
 
 
+def _fmt_faults(sc) -> str:
+    fs = getattr(sc, "faults", None)
+    if fs is None:
+        return ""
+    if fs.is_noop:
+        return "none"
+    return " ".join(f"`{e.kind}@{e.t:.0f}s`" for e in fs.events)
+
+
 def generate() -> str:
     """The full docs/scenarios.md contents for the current registry."""
     import repro.provisioning  # noqa: F401  (registers mc-* scenarios)
@@ -166,7 +183,8 @@ def generate() -> str:
         rows.append(
             f"| `{name}` | {_fmt_duration(sc.duration_s)} | {_fmt_fleet(sc)} "
             f"| {_fmt_traffic(sc)} | {sc.policy.kind} | {_fmt_routing(sc)} "
-            f"| {_fmt_controller(sc)} | {_fmt_budget(sc)} |")
+            f"| {_fmt_controller(sc)} | {_fmt_budget(sc)} "
+            f"| {_fmt_faults(sc)} |")
     return HEADER + "\n".join(rows) + "\n" + FOOTER
 
 
@@ -190,6 +208,7 @@ def _registry_table(title: str, intro: str, entries) -> str:
 def generate_registries() -> str:
     """The full docs/registries.md contents for the current registries."""
     import repro.provisioning  # noqa: F401  (registers the mc-* generators)
+    from repro.chaos import FAULT_EVENT_BUILDERS
     from repro.core.traces import get_occupancy_generator, list_occupancy_generators
     from repro.experiments.scenario import POLICY_BUILDERS
     from repro.fleet.controller import REBALANCE_BUILDERS
@@ -223,6 +242,11 @@ def generate_registries() -> str:
             "(`repro.core.traces`, `repro.provisioning.ensembles`).",
             [(n, get_occupancy_generator(n))
              for n in list_occupancy_generators()]),
+        _registry_table(
+            "Fault events (`FaultEvent.kind`)",
+            "Chaos-timeline event kinds the `ChaosInjector` applies to a "
+            "running fleet between telemetry ticks (`repro.chaos`).",
+            sorted(FAULT_EVENT_BUILDERS.items())),
     ]
     return REG_HEADER + "\n" + "\n".join(sections) + REG_FOOTER
 

@@ -26,6 +26,9 @@ python -m benchmarks.run --quick --only fleet_rebalance
 echo "== site-hierarchy quick benchmark =="
 python -m benchmarks.run --quick --only site_hierarchy
 
+echo "== chaos-resilience quick benchmark =="
+python -m benchmarks.run --quick --only chaos_resilience
+
 echo "== scenario + registry docs sync check =="
 python tools/gen_scenario_docs.py --check
 

@@ -5,6 +5,7 @@ from the command line (flag -> Scenario.seed -> trace generators)."""
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -33,15 +34,54 @@ def seeded(scenario):
     return scenario if BENCH_SEED is None else scenario.with_(seed=BENCH_SEED)
 
 
+def write_bench_json(artifacts_dir: str, basename: str,
+                     rows: Optional[List["Row"]]) -> str:
+    """One ``BENCH_<module>.json`` per module under the artifacts dir:
+    row name -> {us_per_call, derived, ok}. ``rows=None`` records a module
+    that raised before producing rows (rendered FAIL by tools/report.py)."""
+    os.makedirs(artifacts_dir, exist_ok=True)
+    path = os.path.join(artifacts_dir, f"BENCH_{basename}.json")
+    payload = (None if rows is None else
+               {r.name: {"us_per_call": r.us_per_call, "derived": r.derived,
+                         "ok": r.ok} for r in rows})
+    with open(path, "w") as f:
+        json.dump({"module": basename, "rows": payload}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def module_main(run_fn: Callable) -> None:
-    """Shared __main__ entry for benchmark modules: --quick and --seed."""
+    """Shared __main__ entry for benchmark modules: --quick, --seed, and
+    --artifacts (manifest + metrics + events + BENCH_<module>.json, the
+    same pipeline ``benchmarks.run --artifacts`` drives for the full
+    suite)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--seed", type=int, default=None,
                     help="override every scenario's seed (reproducibility)")
+    ap.add_argument("--artifacts", default=None, metavar="DIR",
+                    help="record the run and write manifest + metrics + "
+                         "events + BENCH_<module>.json under DIR")
     args = ap.parse_args()
     set_seed(args.seed)
-    for row in run_fn(quick=args.quick).rows:
+    if args.artifacts:
+        from repro.obs.export import run_manifest, write_artifacts
+        from repro.obs.metrics import MetricsRecorder, recording
+        basename = os.path.splitext(os.path.basename(sys.argv[0]))[0]
+        rec = MetricsRecorder()
+        t0 = time.perf_counter()
+        with recording(rec), rec.span("bench/module", module=basename):
+            bench = run_fn(quick=args.quick)
+        write_bench_json(args.artifacts, basename, bench.rows)
+        write_artifacts(args.artifacts, rec.snapshot(), run_manifest(
+            seed=BENCH_SEED,
+            extra={"kind": f"benchmarks.{basename}",
+                   "quick": bool(args.quick),
+                   "wall_clock_s": round(time.perf_counter() - t0, 3)}))
+    else:
+        bench = run_fn(quick=args.quick)
+    for row in bench.rows:
         print(row.csv())
 
 

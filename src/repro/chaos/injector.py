@@ -44,6 +44,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.chaos.faults import FaultEvent, FaultSpec
+from repro.obs.metrics import get_recorder
 
 _CUM_ATOL = 1e-12
 
@@ -169,6 +170,7 @@ class ChaosInjector:
                 factor=1.0, node_budgets_before_w=before,
                 node_budgets_after_w=h.node_budget_w.copy(),
                 detail=f"scheduled t={e.t:g}s"))
+            self._record_transition(t, e.kind, h.names[int(e.row)], "apply")
         for d in self._derates:
             self._poll_derate(d, t, fleet)
 
@@ -193,6 +195,7 @@ class ChaosInjector:
                     node_budgets_after_w=h.node_budget_w.copy(),
                     detail=(f"-{d.applied_delta_w:.0f} W"
                             + (f" over {e.ramp_s:g}s ramp" if e.ramp_s else ""))))
+                self._record_transition(t, e.kind, h.names[d.node], "apply")
         if d.done and not d.restored and e.until is not None and t >= e.until:
             before = h.node_budget_w.copy()
             self._restore(fleet, d, t)
@@ -203,6 +206,20 @@ class ChaosInjector:
                 factor=e.factor, node_budgets_before_w=before,
                 node_budgets_after_w=h.node_budget_w.copy(),
                 detail=f"+{d.applied_delta_w:.0f} W returned"))
+            self._record_transition(t, e.kind, h.names[d.node], "restore")
+
+    @staticmethod
+    def _record_transition(t: float, kind: str, target: str,
+                           phase: str) -> None:
+        """Mirror a fault phase transition into the observability event
+        trace — one event + counter per FaultRecord, write-only."""
+        rec = get_recorder()
+        if rec.enabled:
+            rec.event("chaos",
+                      "fault_apply" if phase == "apply" else "fault_restore",
+                      t=t, fault=kind, target=target, phase=phase)
+            rec.counter("chaos_fault_transitions_total",
+                        kind=kind, phase=phase)
 
     # -- budget primitives ---------------------------------------------------
     def _scale_subtree(self, fleet, node: int, g: float, t: float) -> float:

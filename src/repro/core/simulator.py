@@ -30,6 +30,7 @@ from repro.core.power_model import FREQ_UNCAPPED, ServerPower
 from repro.core.slo import LatencyStats
 from repro.core.telemetry import Telemetry, dispatch
 from repro.core.workload import RequestTiming
+from repro.obs.metrics import get_recorder
 
 
 @dataclass(frozen=True)
@@ -171,6 +172,9 @@ class RowSimulator:
         self._power_samples_t: List[float] = []
         self._power_samples_w: List[float] = []
         self._braked_samples: List[bool] = []
+        # last brake state seen on the telemetry grid, for edge events
+        # (matches braked_series semantics: initial state is unbraked)
+        self._last_braked = False
         self._power_integral = 0.0
         self._last_power_t = 0.0
         self._peak = 0.0
@@ -441,9 +445,14 @@ class RowSimulator:
                 actual = t - req.t_arrival
                 res.latency.add(req.priority, actual, ideal)
                 res.latencies[req.rid] = actual
-                res.queue_delays[req.rid] = s.t_service_start - req.t_arrival
+                qd = s.t_service_start - req.t_arrival
+                res.queue_delays[req.rid] = qd
                 res.n_completed += 1
                 res.served_tokens += req.out_tokens
+                # write-only observability: a no-op on the NullRecorder
+                # default, never read back into simulation state
+                get_recorder().observe_k("row_queue_delay_seconds", qd,
+                                         (("priority", req.priority),))
                 self._start_next(s, t)
         elif kind == "telemetry":
             tel = self.sample_telemetry(t)
@@ -454,7 +463,21 @@ class RowSimulator:
             if self.cfg.record_power:
                 self._power_samples_t.append(t)
                 self._power_samples_w.append(tel.power_frac)
-                self._braked_samples.append(bool(tel.braked))
+                braked = bool(tel.braked)
+                self._braked_samples.append(braked)
+                if braked != self._last_braked:
+                    # brake engage/release *edge* events, emitted at the
+                    # same sample point braked_series records — so edge
+                    # counts in the event trace reconcile exactly with
+                    # braked_series transitions (benchmark-asserted)
+                    self._last_braked = braked
+                    rec = get_recorder()
+                    rec.event("row",
+                              "brake_engage" if braked else "brake_release",
+                              t=t, row=self.row_index)
+                    rec.counter("row_brake_edges_total",
+                                edge="engage" if braked else "release",
+                                row=self.row_index)
             self._push(t + self.cfg.telemetry_s, "telemetry", ())
         elif kind == "apply":
             lp, hp = args

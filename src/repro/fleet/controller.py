@@ -47,6 +47,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.metrics import get_recorder
+
 CONSERVATION_ATOL = 1e-6  # watts; rebalances re-normalize exactly
 
 
@@ -309,6 +311,7 @@ class FleetController:
                     and bool(np.all(new >= caps - CONSERVATION_ATOL)))), \
             (f"rebalance broke conservation: group sum {total:.6f} != "
              f"envelope {envelope:.6f} with capacity headroom left")
+        get_recorder().counter("controller_conservation_checks_total")
         return new
 
     @staticmethod
@@ -428,6 +431,23 @@ class FleetController:
                             node_budgets_before_w=node_before,
                             node_budgets_after_w=node_after)
         self.events.append(ev)
+        rec = get_recorder()
+        if rec.enabled:
+            rec.counter("controller_rebalance_total",
+                        policy=self.policy.name, scope=self.scope)
+            rec.observe("controller_moved_watts", moved_w)
+            rec.event("controller", "rebalance", t=t,
+                      policy=self.policy.name, scope=self.scope,
+                      moved_w=round(moved_w, 6))
+            # per-node budget deltas: the post-rebalance budget in force at
+            # every named node (leaves carry row budgets; under tree scope
+            # the interior nodes move too)
+            names = h.names
+            node_b = node_after if node_after is not None else None
+            if node_b is None:
+                node_b = h.node_budget_w
+            for name, b in zip(names, node_b):
+                rec.gauge("controller_node_budget_w", float(b), node=name)
         return ev
 
 

@@ -39,6 +39,7 @@ from repro.core.slo import LatencyStats
 # next to build_fleet
 from repro.experiments.runner import row_budgets  # noqa: F401
 from repro.fleet.controller import FleetController, PowerForecaster, RebalanceEvent
+from repro.obs.metrics import get_recorder
 from repro.fleet.router import (
     AdmissionController,
     AdmitAll,
@@ -293,6 +294,9 @@ class FleetSimulator:
             self.decisions.append(RoutingDecision(
                 req.rid, req.t_arrival, req.wl, req.priority, -1,
                 f"shed/{self.admission.name}"))
+            get_recorder().counter("fleet_shed_total",
+                                   reason=f"shed/{self.admission.name}",
+                                   priority=req.priority)
             return
         if self._any_dead:
             # crashed rows are invisible to the router; with none left the
@@ -304,6 +308,9 @@ class FleetSimulator:
                 self.decisions.append(RoutingDecision(
                     req.rid, req.t_arrival, req.wl, req.priority, -1,
                     "shed/row-crash"))
+                get_recorder().counter("fleet_shed_total",
+                                       reason="shed/row-crash",
+                                       priority=req.priority)
                 return
             views = ([self._view(i, req) for i in alive]
                      if self.router.needs_views
@@ -315,6 +322,8 @@ class FleetSimulator:
         row, reason = self.router.route(req, views)
         self.decisions.append(RoutingDecision(
             req.rid, req.t_arrival, req.wl, req.priority, row, reason))
+        get_recorder().counter_k("fleet_dispatch_total", 1.0,
+                                 (("reason", reason), ("row", str(row))))
         self.rows[row].inject(req)
 
     # ------------------------------------------------------------------
@@ -360,6 +369,11 @@ class FleetSimulator:
                 self._interior_budget_samples.append(
                     self.hierarchy.node_budget_w[self.hierarchy.n_leaves:].copy())
                 self._shed_cum.append(sum(self.n_shed.values()))
+                rec = get_recorder()
+                if rec.enabled:
+                    rec.counter_k("fleet_ticks_total")
+                    rec.gauge("fleet_cluster_power_frac",
+                              self._stale_cluster_frac)
                 fc_w = None
                 if self._forecaster is not None:
                     self._forecaster.observe(self._next_tick, row_w)

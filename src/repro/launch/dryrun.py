@@ -31,8 +31,11 @@ from repro.launch.inputs import input_specs, make_rules, split_seq
 from repro.launch.mesh import make_production_mesh, set_mesh
 from repro.launch.steps import abstract_state, build_serve_step
 from repro.models.config import SHAPES_BY_NAME, shape_applicable
+from repro.obs.log import get_logger
 from repro.optim import Optimizer
 from repro.parallel.roofline import HBM_BYTES, build_roofline_extrapolated
+
+log = get_logger(__name__)
 
 
 def _lower_compile(cfg, shape, mesh, rules):
@@ -114,19 +117,20 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
         roofline=roof.to_dict(),
     )
     if verbose:
-        print(f"[{rec['mesh']}] {arch} x {shape_name}: "
-              f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
-              f"{bytes_per_dev/2**30:.2f} GiB/dev (fits={rec['fits_hbm']}) | "
-              f"bottleneck={roof.bottleneck} "
-              f"[C={roof.t_compute*1e3:.2f}ms M={roof.t_memory*1e3:.2f}ms "
-              f"X={roof.t_collective*1e3:.2f}ms] mfu_bound={roof.mfu_bound:.3f}")
-        print("  memory_analysis:", mem)
-        print("  analytic flops/device: %.3e bytes/device: %.3e | "
-              "hlo flops/device: %.3e bytes/device: %.3e"
-              % (roof.flops_per_device, roof.hbm_bytes_per_device,
-                 roof.hlo_flops_per_device, roof.hlo_bytes_per_device))
-        print("  collectives:", roof.collectives.ops,
-              {k: f"{v/2**20:.1f}MiB" for k, v in roof.collectives.bytes_by_kind.items()})
+        log.info(f"[{rec['mesh']}] {arch} x {shape_name}: "
+                 f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+                 f"{bytes_per_dev/2**30:.2f} GiB/dev (fits={rec['fits_hbm']}) | "
+                 f"bottleneck={roof.bottleneck} "
+                 f"[C={roof.t_compute*1e3:.2f}ms M={roof.t_memory*1e3:.2f}ms "
+                 f"X={roof.t_collective*1e3:.2f}ms] mfu_bound={roof.mfu_bound:.3f}")
+        log.info("  memory_analysis: %s", mem)
+        log.info("  analytic flops/device: %.3e bytes/device: %.3e | "
+                 "hlo flops/device: %.3e bytes/device: %.3e",
+                 roof.flops_per_device, roof.hbm_bytes_per_device,
+                 roof.hlo_flops_per_device, roof.hlo_bytes_per_device)
+        log.info("  collectives: %s %s", roof.collectives.ops,
+                 {k: f"{v/2**20:.1f}MiB"
+                  for k, v in roof.collectives.bytes_by_kind.items()})
     return rec
 
 

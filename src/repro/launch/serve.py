@@ -28,6 +28,9 @@ from repro.launch.steps import build_decode_step, build_prefill_step
 from repro.models import model as model_mod
 from repro.models.config import ShapeConfig
 from repro.models.param import init_params
+from repro.obs.log import get_logger
+
+log = get_logger(__name__)
 
 
 class ServeEngine:
@@ -91,20 +94,20 @@ def main():
     t0 = time.time()
     out = eng.generate(tokens, args.out_tokens, extra)
     dt = time.time() - t0
-    print(f"served batch={args.requests} prompt={args.prompt} out={args.out_tokens} "
-          f"in {dt:.2f}s ({dt/args.out_tokens*1e3:.1f} ms/token step)")
-    print("sample output tokens:", out[0, :16])
+    log.info(f"served batch={args.requests} prompt={args.prompt} out={args.out_tokens} "
+             f"in {dt:.2f}s ({dt/args.out_tokens*1e3:.1f} ms/token step)")
+    log.info("sample output tokens: %s", out[0, :16])
 
     if args.report_power:
         # Figure-4-style phase profile from the shared workload/power model
         server = ServerPower(A100)
         full = get_config(args.arch)
         t = request_timing(full, args.prompt, args.requests, server)
-        print(f"[power] {full.name}: prompt phase {t.t_prefill:.3f}s @ "
-              f"{t.prefill_point.power_at(server, 1.0):.0f}W (compute-bound "
-              f"u_c={t.prefill_point.u_compute:.2f}) | token phase "
-              f"{t.t_token*1e3:.1f}ms/tok @ {t.token_point.power_at(server, 1.0):.0f}W "
-              f"(memory-bound u_m={t.token_point.u_memory:.2f})")
+        log.info(f"[power] {full.name}: prompt phase {t.t_prefill:.3f}s @ "
+                 f"{t.prefill_point.power_at(server, 1.0):.0f}W (compute-bound "
+                 f"u_c={t.prefill_point.u_compute:.2f}) | token phase "
+                 f"{t.t_token*1e3:.1f}ms/tok @ {t.token_point.power_at(server, 1.0):.0f}W "
+                 f"(memory-bound u_m={t.token_point.u_memory:.2f})")
 
 
 if __name__ == "__main__":

@@ -27,8 +27,11 @@ from repro.launch.steps import build_train_step
 from repro.models import model as model_mod
 from repro.models.config import ShapeConfig
 from repro.models.param import init_params
+from repro.obs.log import get_logger
 from repro.optim import make_optimizer
 from repro.runtime.fault_tolerance import StragglerMonitor, TrainSupervisor
+
+log = get_logger(__name__)
 
 
 def main():
@@ -59,7 +62,7 @@ def main():
         opt_state = init_params(opt.init_specs(pspecs), jax.random.key(1))
     state = {"params": params, "opt": opt_state}
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
-    print(f"arch={cfg.name} params={n_params/1e6:.1f}M mesh={dict(mesh.shape)}")
+    log.info(f"arch={cfg.name} params={n_params/1e6:.1f}M mesh={dict(mesh.shape)}")
 
     pipeline = SyntheticTokenPipeline(cfg, DataConfig(args.batch, args.seq))
     step_fn = jax.jit(build_train_step(cfg, mesh, rules, opt))
@@ -78,10 +81,10 @@ def main():
                           place_batch=lambda b: device_put_batch(b, mesh, rules))
     dt = time.time() - t0
     losses = [h["loss"] for h in sup.history]
-    print(f"done: {last} steps in {dt:.1f}s "
-          f"({dt/max(1,len(sup.history)):.3f}s/step) "
-          f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
-          f"restarts={sup.n_restarts} stragglers={len(sup.straggler.flagged_steps)}")
+    log.info(f"done: {last} steps in {dt:.1f}s "
+             f"({dt/max(1,len(sup.history)):.3f}s/step) "
+             f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+             f"restarts={sup.n_restarts} stragglers={len(sup.straggler.flagged_steps)}")
     assert losses[-1] < losses[0], "training should reduce loss"
     with open("/tmp/train_history.json", "w") as f:
         json.dump(sup.history, f)

@@ -1,0 +1,67 @@
+"""First-class observability for the POLCA power-plane stack (DESIGN.md §14).
+
+The telemetry substrate the paper argues oversubscription control depends
+on: ``metrics`` (counters/gauges/histograms with labels and snapshot/merge,
+a ``span()`` wall-clock profiler, and a structured event log — all behind a
+no-op :class:`NullRecorder` default so instrumentation never perturbs an
+unobserved run), ``export`` (Prometheus text exposition, JSONL event
+traces, per-run manifests under an ``--artifacts`` dir), and ``log`` (the
+shared stderr stdlib-logging setup the launchers route prints through).
+
+The hard guarantee, asserted in tier-1 tests and the observability
+benchmark: recorder-on and recorder-off simulations are **bit-identical**
+— observability observes, never perturbs.
+"""
+
+from repro.obs.export import (
+    EVENTS_NAME,
+    MANIFEST_NAME,
+    METRICS_NAME,
+    event_lines,
+    prometheus_text,
+    read_events,
+    read_manifest,
+    read_prometheus,
+    run_manifest,
+    write_artifacts,
+)
+from repro.obs.log import get_logger, setup_logging
+from repro.obs.metrics import (
+    DEFAULT_BUCKETS,
+    NULL_RECORDER,
+    Event,
+    Histogram,
+    MetricsRecorder,
+    MetricsSnapshot,
+    NullRecorder,
+    SpanStats,
+    get_recorder,
+    recording,
+    set_recorder,
+)
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "EVENTS_NAME",
+    "Event",
+    "Histogram",
+    "MANIFEST_NAME",
+    "METRICS_NAME",
+    "MetricsRecorder",
+    "MetricsSnapshot",
+    "NULL_RECORDER",
+    "NullRecorder",
+    "SpanStats",
+    "event_lines",
+    "get_logger",
+    "get_recorder",
+    "prometheus_text",
+    "read_events",
+    "read_manifest",
+    "read_prometheus",
+    "recording",
+    "run_manifest",
+    "set_recorder",
+    "setup_logging",
+    "write_artifacts",
+]

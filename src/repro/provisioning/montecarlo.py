@@ -71,6 +71,13 @@ from repro.experiments.runner import (
     run_experiment,
 )
 from repro.experiments.scenario import Scenario
+from repro.obs.metrics import (
+    MetricsRecorder,
+    MetricsSnapshot,
+    NULL_RECORDER,
+    get_recorder,
+    recording,
+)
 
 import repro.provisioning.ensembles  # noqa: F401  (registers trace generators)
 
@@ -242,7 +249,9 @@ def _finalize_member(sim) -> SimResult:
     return as_sim_result(res)
 
 
-def _run_shard(payload: Tuple[List[Scenario], float]) -> List[Tuple[SimResult, LatencyStats]]:
+def _run_shard(payload: Tuple[List[Scenario], float, int]
+               ) -> Tuple[List[Tuple[SimResult, LatencyStats]],
+                          Optional[MetricsSnapshot]]:
     """Worker: run one shard of members as a lockstep pool (the cluster
     drive mode: start all, advance all on a stride grid, finalize all).
     Members whose scenario requests a reference comparison get a paired
@@ -250,8 +259,35 @@ def _run_shard(payload: Tuple[List[Scenario], float]) -> List[Tuple[SimResult, L
     scenario carries a RoutingSpec run as whole routed fleets
     (:class:`~repro.fleet.fleet.FleetSimulator`) — multi-row ensemble members
     lockstep next to single-row ones through the same drive protocol, with
-    any declared ControllerSpec rebalancing their row budgets in-run."""
-    scenarios, stride = payload
+    any declared ControllerSpec rebalancing their row budgets in-run.
+
+    Observability: with a recorder installed (inherited across the fork),
+    each member records into its **own** fresh recorder — member snapshots
+    merge back in member order regardless of sharding, so event traces are
+    worker-count-invariant (tier-1-asserted). Reference twins record under
+    the null recorder (they are a measurement baseline, not part of the
+    observed run). The shard itself is timed by one ``mc/shard`` span, the
+    fork-pool skew signal (wall-clock; excluded from determinism by
+    nature). Returns ``(results, snapshot-or-None)``."""
+    scenarios, stride, shard_idx = payload
+    member_recs: Optional[List[MetricsRecorder]] = (
+        [MetricsRecorder() for _ in scenarios]
+        if get_recorder().enabled else None)
+    shard_rec = MetricsRecorder() if member_recs is not None else NULL_RECORDER
+    with shard_rec.span("mc/shard", shard=shard_idx,
+                        members=len(scenarios)):
+        out = _run_shard_pool(scenarios, stride, member_recs)
+    if member_recs is None:
+        return out, None
+    snap = shard_rec.snapshot()
+    for r in member_recs:
+        snap.merge(r.snapshot())
+    return out, snap
+
+
+def _run_shard_pool(scenarios: List[Scenario], stride: float,
+                    member_recs: Optional[List[MetricsRecorder]]
+                    ) -> List[Tuple[SimResult, LatencyStats]]:
     sims: List[object] = []
     refs: List[Optional[object]] = []
     traces = []
@@ -284,6 +320,11 @@ def _run_shard(payload: Tuple[List[Scenario], float]) -> List[Tuple[SimResult, L
         else:
             refs.append(None)
     pool = sims + [r for r in refs if r is not None]
+    # per-pool-slot recorder: member i records into its own recorder,
+    # reference twins into the no-op null recorder
+    pool_recs = ((list(member_recs)
+                  + [NULL_RECORDER] * (len(pool) - len(sims)))
+                 if member_recs is not None else [NULL_RECORDER] * len(pool))
     for s in pool:
         s.start()
     duration = max((s.duration for s in pool), default=0.0)
@@ -292,25 +333,31 @@ def _run_shard(payload: Tuple[List[Scenario], float]) -> List[Tuple[SimResult, L
     while t <= duration and any(alive):
         for i, s in enumerate(pool):
             if alive[i]:
-                alive[i] = s.advance_to(min(t, s.duration))
+                with recording(pool_recs[i]):
+                    alive[i] = s.advance_to(min(t, s.duration))
         t += stride
-    for s in pool:
-        s.advance_to(s.duration)
+    for i, s in enumerate(pool):
+        with recording(pool_recs[i]):
+            s.advance_to(s.duration)
     out = []
-    for sim, ref, reqs in zip(sims, refs, traces):
-        res = _finalize_member(sim)
+    for k, (sim, ref, reqs) in enumerate(zip(sims, refs, traces)):
+        with recording(pool_recs[k]):
+            res = _finalize_member(sim)
         if ref is None:
             stats = res.latency
         else:
-            stats = impact_vs_reference(res.latencies,
-                                        _finalize_member(ref).latencies,
+            with recording(NULL_RECORDER):
+                ref_latencies = _finalize_member(ref).latencies
+            stats = impact_vs_reference(res.latencies, ref_latencies,
                                         {r.rid: r.priority for r in reqs})
         out.append((res, stats))
     return out
 
 
-def _map_shards(shards: List[Tuple[List[Scenario], float]],
-                n_workers: int) -> List[List[Tuple[SimResult, LatencyStats]]]:
+def _map_shards(shards: List[Tuple[List[Scenario], float, int]],
+                n_workers: int
+                ) -> List[Tuple[List[Tuple[SimResult, LatencyStats]],
+                                Optional[MetricsSnapshot]]]:
     if n_workers <= 1 or len(shards) <= 1:
         return [_run_shard(sh) for sh in shards]
     try:
@@ -334,11 +381,21 @@ def _default_workers(n_members: int, n_workers: Optional[int]) -> int:
 
 def _run_members(members: List[Scenario], stride: float,
                  n_workers: int) -> List[Tuple[SimResult, LatencyStats]]:
-    """One batched pass over concrete member scenarios, order-preserving."""
+    """One batched pass over concrete member scenarios, order-preserving.
+    Worker metric snapshots fold back into the ambient recorder in shard
+    (i.e. member) order, so the merged trace is identical for any worker
+    count."""
     w = _default_workers(len(members), n_workers)
     bounds = np.linspace(0, len(members), w + 1).astype(int)
-    shards = [(members[a:b], stride) for a, b in zip(bounds, bounds[1:]) if b > a]
-    return [r for shard in _map_shards(shards, len(shards)) for r in shard]
+    spans = [(a, b) for a, b in zip(bounds, bounds[1:]) if b > a]
+    shards = [(members[a:b], stride, si) for si, (a, b) in enumerate(spans)]
+    rec = get_recorder()
+    out: List[Tuple[SimResult, LatencyStats]] = []
+    for results, snap in _map_shards(shards, len(shards)):
+        out.extend(results)
+        if snap is not None and rec.enabled:
+            rec.merge_snapshot(snap)
+    return out
 
 
 def _ensemble_result(base: Scenario, budget_w: float, members: List[Scenario],
@@ -377,11 +434,14 @@ def resolve_ensemble_budget(base: Scenario) -> float:
 def run_ensemble(spec: EnsembleSpec, *,
                  budget_w: Optional[float] = None) -> EnsembleResult:
     """Evaluate all members of ``spec`` in one batched pass."""
-    budget = resolve_ensemble_budget(spec.base) if budget_w is None else float(budget_w)
-    members = spec.member_scenarios(budget)
-    results = _run_members(members, spec.lockstep_stride_s,
-                           _default_workers(len(members), spec.n_workers))
-    return _ensemble_result(spec.base, budget, members, results)
+    with get_recorder().span("mc/run_ensemble", base=spec.base.name,
+                             members=spec.n_seeds):
+        budget = (resolve_ensemble_budget(spec.base) if budget_w is None
+                  else float(budget_w))
+        members = spec.member_scenarios(budget)
+        results = _run_members(members, spec.lockstep_stride_s,
+                               _default_workers(len(members), spec.n_workers))
+        return _ensemble_result(spec.base, budget, members, results)
 
 
 def run_ensemble_grid(bases: Sequence[Scenario], *, n_seeds: int = 8,

@@ -39,6 +39,7 @@ from typing import Dict, List, Optional, Sequence
 from repro.chaos.faults import FaultSpec
 from repro.core.slo import DEFAULT_SLO, SLO, meets_slo
 from repro.experiments.scenario import Scenario
+from repro.obs.metrics import get_recorder
 from repro.provisioning.montecarlo import (
     EnsembleResult,
     EnsembleSpec,
@@ -157,22 +158,24 @@ def plan_capacity(base: Scenario, *,
 
     def probe(k: int) -> PlanPoint:
         sc = base.with_fleet(added_frac=k / n_prov).with_(budget=budget)
-        ens = run_ensemble(EnsembleSpec(sc, n_seeds=n_seeds, seed0=seed0,
-                                        n_workers=n_workers,
-                                        with_reference=True),
-                           budget_w=budget)
-        brake_p = ens.brake_prob(constraints.max_brakes)
-        slo_p = _violation_prob(ens, constraints.slo)
-        fault_p: Optional[float] = None
-        if survive is not None:
-            # same seeds + pinned budget, fault timeline injected: the only
-            # difference vs `ens` is the fault, so the gate isolates it. No
-            # reference twins — the gate is brake-only.
-            fens = run_ensemble(
-                EnsembleSpec(sc.with_(faults=survive), n_seeds=n_seeds,
-                             seed0=seed0, n_workers=n_workers),
-                budget_w=budget)
-            fault_p = fens.brake_prob(constraints.max_fault_brakes)
+        rec = get_recorder()
+        with rec.span("planner/probe", scenario=base.name, added=k):
+            ens = run_ensemble(EnsembleSpec(sc, n_seeds=n_seeds, seed0=seed0,
+                                            n_workers=n_workers,
+                                            with_reference=True),
+                               budget_w=budget)
+            brake_p = ens.brake_prob(constraints.max_brakes)
+            slo_p = _violation_prob(ens, constraints.slo)
+            fault_p: Optional[float] = None
+            if survive is not None:
+                # same seeds + pinned budget, fault timeline injected: the only
+                # difference vs `ens` is the fault, so the gate isolates it. No
+                # reference twins — the gate is brake-only.
+                fens = run_ensemble(
+                    EnsembleSpec(sc.with_(faults=survive), n_seeds=n_seeds,
+                                 seed0=seed0, n_workers=n_workers),
+                    budget_w=budget)
+                fault_p = fens.brake_prob(constraints.max_fault_brakes)
         pt = PlanPoint(
             added_servers=k, added_frac=k / n_prov,
             feasible=(brake_p <= constraints.max_brake_prob + _EPS
@@ -184,6 +187,16 @@ def plan_capacity(base: Scenario, *,
             fault_brake_prob=fault_p,
             ensemble=ens if keep_ensembles else None)
         probes.append(pt)
+        if rec.enabled:
+            # probe outcome: logical time is the probe ordinal (the planner
+            # has no simulation clock of its own)
+            rec.event("planner", "probe", t=float(len(probes)),
+                      scenario=base.name, added=k,
+                      feasible=pt.feasible,
+                      brake_prob=round(brake_p, 6),
+                      slo_violation_prob=round(slo_p, 6))
+            rec.counter("planner_probes_total",
+                        outcome="feasible" if pt.feasible else "infeasible")
         return pt
 
     hi = max(1, int(math.floor(n_prov * max_added_frac)))

@@ -1,0 +1,429 @@
+"""Observability subsystem: zero-perturbation recording, exact
+reconciliation, deterministic export (DESIGN.md §14).
+
+Covers the hard guarantees end to end: recorder-on vs recorder-off
+bit-parity on routed-fleet / tree-controller / chaos / Monte-Carlo runs,
+brake-edge events reconciling exactly with ``braked_series``, ensemble
+traces invariant to the worker count, histogram snapshot/merge algebra,
+Prometheus + JSONL + manifest round-trips, the ``--only`` benchmark
+selector, the artifact report renderer, and the shared launcher logging."""
+
+import io
+import json
+import logging
+import os
+
+import numpy as np
+import pytest
+
+from repro.chaos import FaultEvent, FaultSpec
+from repro.experiments import (
+    ControllerSpec,
+    FleetSpec,
+    HierarchySpec,
+    PolicySpec,
+    RoutingSpec,
+    Scenario,
+    TrafficSpec,
+    run_experiment,
+)
+from repro.obs.export import (
+    EVENTS_NAME,
+    METRICS_NAME,
+    event_lines,
+    prometheus_text,
+    read_events,
+    read_manifest,
+    read_prometheus,
+    run_manifest,
+    write_artifacts,
+    write_events,
+)
+from repro.obs.metrics import (
+    Event,
+    Histogram,
+    MetricsRecorder,
+    NullRecorder,
+    get_recorder,
+    label_key,
+    recording,
+    set_recorder,
+)
+from repro.provisioning import EnsembleSpec, run_ensemble
+
+
+def _obs_scenario(faults=None, **kw) -> Scenario:
+    base = dict(
+        name="obs-test",
+        duration_s=1500.0,
+        fleet=FleetSpec(n_provisioned=16, added_frac=0.25, n_rows=8),
+        policy=PolicySpec("polca"),
+        traffic=TrafficSpec(occ_peak=0.9),
+        routing=RoutingSpec("cap-aware"),
+        controller=ControllerSpec("predictive", interval_s=30.0, scope="tree"),
+        hierarchy=HierarchySpec(shape=(2, 2, 2)),
+        budget="nominal",
+        compare_to_reference=False,
+        faults=faults,
+    )
+    base.update(kw)
+    return Scenario(**base)
+
+
+_DERATE = FaultSpec((FaultEvent("node-derate", t=300.0, node="pdu0",
+                                factor=0.7, until=1200.0),))
+
+
+def _run_recorded(scenario):
+    rec = MetricsRecorder()
+    with recording(rec):
+        res = run_experiment(scenario)
+    return res, rec.snapshot()
+
+
+def _assert_bit_identical(off, on):
+    assert off.result.latencies == on.result.latencies
+    assert off.fleet.decisions == on.fleet.decisions
+    assert off.fleet.n_shed == on.fleet.n_shed
+    assert np.array_equal(off.fleet.cluster_power_frac,
+                          on.fleet.cluster_power_frac)
+    assert np.array_equal(off.fleet.row_power_frac, on.fleet.row_power_frac)
+    assert off.result.n_brakes == on.result.n_brakes
+
+
+# ------------------------------------------------------------- recorder core
+def test_default_recorder_is_disabled_null():
+    rec = get_recorder()
+    assert isinstance(rec, NullRecorder) and not rec.enabled
+    # every write is a no-op and must not raise
+    rec.counter("x", row=1)
+    rec.gauge("g", 1.0)
+    rec.observe("h", 0.5)
+    rec.event("sub", "kind", t=0.0)
+    with rec.span("s"):
+        pass
+
+
+def test_recording_context_installs_and_restores():
+    rec = MetricsRecorder()
+    outer = get_recorder()
+    with recording(rec):
+        assert get_recorder() is rec
+        get_recorder().counter("inside")
+    assert get_recorder() is outer
+    assert rec.snapshot().counter_total("inside") == 1.0
+
+
+def test_set_recorder_none_resets_to_null():
+    set_recorder(MetricsRecorder())
+    try:
+        assert get_recorder().enabled
+    finally:
+        set_recorder(None)
+    assert not get_recorder().enabled
+
+
+# ------------------------------------------------------- bit-parity contract
+def test_fleet_bit_parity_recorder_on_vs_off():
+    """Acceptance: instrumentation observes, never perturbs — a routed
+    tree-controller fleet run is bit-identical with a live recorder."""
+    sc = _obs_scenario()
+    off = run_experiment(sc)
+    on, snap = _run_recorded(sc)
+    _assert_bit_identical(off, on)
+    # and the trace actually recorded the run: every non-shed routing
+    # decision is a dispatch increment, every shed one a shed increment
+    n_shed = sum(1 for d in on.fleet.decisions if d.row < 0)
+    assert snap.counter_total("fleet_dispatch_total") == \
+        len(on.fleet.decisions) - n_shed
+    assert snap.counter_total("fleet_shed_total") == n_shed
+    assert snap.counter_total("fleet_ticks_total") > 0
+
+
+def test_chaos_bit_parity_and_fault_transition_events():
+    sc = _obs_scenario(faults=_DERATE)
+    off = run_experiment(sc)
+    on, snap = _run_recorded(sc)
+    _assert_bit_identical(off, on)
+    # one chaos event per applied fault phase, reconciling with the audit log
+    chaos_events = (snap.events_of("chaos", "fault_apply")
+                    + snap.events_of("chaos", "fault_restore"))
+    assert len(chaos_events) == on.fleet.n_fault_events == 2
+    assert snap.counter_total("chaos_fault_transitions_total") == 2
+
+
+def test_controller_rebalance_events_reconcile():
+    on, snap = _run_recorded(_obs_scenario())
+    evs = snap.events_of("controller", "rebalance")
+    assert len(evs) == on.fleet.n_rebalances
+    assert snap.counter_total("controller_rebalance_total") == len(evs)
+    if evs:  # label values are canonicalized to strings in the trace
+        moved = sum(float(e.labels_dict()["moved_w"]) for e in evs)
+        assert moved == pytest.approx(on.fleet.budget_moved_w(), abs=1e-3)
+
+
+def test_brake_edges_reconcile_with_braked_series():
+    on, snap = _run_recorded(_obs_scenario(
+        traffic=TrafficSpec(occ_peak=1.0), budget="calibrated"))
+    total_edges = 0
+    for i, rr in enumerate(on.fleet.row_results):
+        s = np.asarray(rr.braked_series, bool)
+        prev = np.concatenate([[False], s[:-1]])
+        want = (int(np.sum(~prev & s)), int(np.sum(prev & ~s)))
+        eng = sum(1 for e in snap.events_of("row", "brake_engage")
+                  if e.labels_dict().get("row") == str(i))
+        rel = sum(1 for e in snap.events_of("row", "brake_release")
+                  if e.labels_dict().get("row") == str(i))
+        assert (eng, rel) == want, f"row {i}"
+        total_edges += eng + rel
+    assert total_edges == snap.counter_total("row_brake_edges_total")
+
+
+# --------------------------------------------------- Monte-Carlo invariance
+def test_ensemble_bit_parity_and_worker_invariant_traces():
+    base = _obs_scenario(duration_s=900.0)
+    spec = dict(n_seeds=2, seed0=700)
+    off = run_ensemble(EnsembleSpec(base, n_workers=1, **spec))
+    snaps = []
+    for w in (1, 2):
+        rec = MetricsRecorder()
+        with recording(rec):
+            on = run_ensemble(EnsembleSpec(base, n_workers=w, **spec))
+        assert on.brake_prob() == off.brake_prob()
+        snaps.append(rec.snapshot())
+    s1, s2 = snaps
+    assert s1.counters == s2.counters
+    assert s1.gauges == s2.gauges
+    assert s1.hists == s2.hists
+    assert s1.events == s2.events
+    # per-member shard spans were captured and merged
+    assert any(name == "mc/shard" for (name, _) in s1.spans)
+
+
+# ------------------------------------------------------------ histogram math
+def test_histogram_merge_is_concatenation():
+    """Property: merge(hist(A), hist(B)) == hist(A ++ B), across random
+    draws spanning every bucket regime (sub-min, mid, overflow)."""
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        a = rng.lognormal(mean=-2.0, sigma=3.0, size=137)
+        b = rng.lognormal(mean=1.0, sigma=2.0, size=61)
+        ha, hb, hab = Histogram(), Histogram(), Histogram()
+        for x in a:
+            ha.observe(float(x))
+            hab.observe(float(x))
+        for x in b:
+            hb.observe(float(x))
+            hab.observe(float(x))
+        m = Histogram()
+        m.merge(ha)
+        m.merge(hb)
+        assert m.counts == hab.counts and m.bounds == hab.bounds
+        assert m.count == hab.count == len(a) + len(b)
+        # summation order differs (partial sums vs interleaved): approx only
+        assert m.sum == pytest.approx(hab.sum, rel=1e-12)
+
+
+def test_histogram_quantile_and_cumulative():
+    h = Histogram()
+    for x in np.linspace(0.001, 10.0, 1000):
+        h.observe(float(x))
+    assert h.count == 1000
+    q50, q99 = h.quantile(0.5), h.quantile(0.99)
+    assert 0.0 < q50 <= q99
+    cum = h.cumulative()
+    assert cum == sorted(cum)  # cumulative counts are monotone
+    assert cum[-1] == 1000  # everything lands under the top finite bound
+
+
+def test_snapshot_merge_accumulates():
+    r1, r2 = MetricsRecorder(), MetricsRecorder()
+    r1.counter("c", k="a")
+    r1.gauge("g", 1.0)
+    r1.observe("h", 0.1)
+    r1.event("s", "e1", t=1.0)
+    r2.counter("c", k="a", value=2.0)
+    r2.gauge("g", 5.0)
+    r2.observe("h", 0.2)
+    r2.event("s", "e2", t=2.0)
+    s = r1.snapshot()
+    s.merge(r2.snapshot())
+    assert s.counter_total("c") == 3.0
+    assert s.gauges[("g", ())] == 5.0  # last write wins
+    assert s.hists[("h", ())].count == 2
+    assert [e.kind for e in s.events] == ["e1", "e2"]
+
+
+def test_fast_path_label_keys_match_kwargs_path():
+    r1, r2 = MetricsRecorder(), MetricsRecorder()
+    r1.counter("c", reason="x", row="3")
+    r1.observe("h", 0.5, priority="high")
+    r2.counter_k("c", 1.0, label_key({"reason": "x", "row": "3"}))
+    r2.observe_k("h", 0.5, (("priority", "high"),))
+    assert r1.snapshot().counters == r2.snapshot().counters
+    assert r1.snapshot().hists == r2.snapshot().hists
+
+
+# ------------------------------------------------------------------- export
+def test_events_jsonl_roundtrip(tmp_path):
+    rec = MetricsRecorder()
+    rec.event("row", "brake_engage", t=0.5, row=3)
+    rec.event("controller", "rebalance", t=1.0, moved_w=12.5,
+              policy="predictive")
+    rec.event("chaos", "fault_apply", t=2.0)
+    snap = rec.snapshot()
+    path = tmp_path / EVENTS_NAME
+    with open(path, "w") as f:
+        assert write_events(snap, f) == 3
+    back = read_events(str(path))
+    assert back == snap.events
+    assert back[0] == Event(0.5, "row", "brake_engage", (("row", "3"),))
+    # deterministic serialization: sorted keys, one JSON object per line
+    lines = event_lines(snap)
+    assert lines == event_lines(snap)
+    assert all(json.loads(ln) for ln in lines)
+
+
+def test_prometheus_roundtrip(tmp_path):
+    rec = MetricsRecorder()
+    rec.counter("fleet_dispatch_total", reason='ok "primary"', row="0")
+    rec.counter("fleet_dispatch_total", reason="spill\nover", row="1",
+                value=2.0)
+    rec.gauge("fleet_cluster_power_frac", 0.875)
+    rec.observe("row_queue_delay_seconds", 0.25, priority="high")
+    with rec.span("mc/run_ensemble", base="obs-test"):
+        pass
+    snap = rec.snapshot()
+    text = prometheus_text(snap)
+    path = tmp_path / METRICS_NAME
+    path.write_text(text)
+    prom = read_prometheus(str(path))
+    counters = dict()
+    for labels, v in prom["counter"]["fleet_dispatch_total"]:
+        counters[labels["reason"]] = v
+    assert counters == {'ok "primary"': 1.0, "spill\nover": 2.0}
+    assert prom["gauge"]["fleet_cluster_power_frac"][0][1] == 0.875
+    # suffixed samples resolve to the declared base TYPE
+    hist = prom["histogram"]
+    [(labels, n)] = hist["row_queue_delay_seconds_count"]
+    assert labels == {"priority": "high"} and n == 1.0
+    inf = [v for lb, v in hist["row_queue_delay_seconds_bucket"]
+           if lb["le"] == "+Inf"]
+    assert inf == [1.0]
+    [(labels, n)] = prom["summary"]["mc_run_ensemble_seconds_count"]
+    assert labels == {"base": "obs-test"} and n == 1.0
+    assert "untyped" not in prom
+
+
+def test_manifest_and_write_artifacts(tmp_path):
+    rec = MetricsRecorder()
+    rec.counter("c")
+    rec.event("s", "k", t=0.0)
+    man = run_manifest(seed=123, scenario="obs-test",
+                       argv=["benchmarks.run", "--quick"],
+                       extra={"kind": "test"})
+    write_artifacts(str(tmp_path), rec.snapshot(), man)
+    back = read_manifest(str(tmp_path))
+    assert back["seed"] == 123
+    assert back["scenario"] == "obs-test"
+    assert back["kind"] == "test"
+    assert back["numpy"]
+    assert (tmp_path / METRICS_NAME).exists()
+    assert len(read_events(str(tmp_path / EVENTS_NAME))) == 1
+
+
+# -------------------------------------------------------- benchmark selector
+def test_select_modules_matching_rules():
+    from benchmarks.run import MODULES, select_modules
+
+    assert select_modules(None) == list(MODULES)
+    assert select_modules("") == list(MODULES)
+    # prefix match stops at an underscore boundary
+    [m] = select_modules("table2")
+    assert m.endswith("table2_cluster_stats")
+    # comma list, original MODULES order, deduped
+    sel = select_modules("capacity,table2,table2")
+    assert [s.rsplit(".", 1)[-1][:8] for s in sel] == \
+        [m.rsplit(".", 1)[-1][:8] for m in MODULES
+         if m.rsplit(".", 1)[-1].startswith(("table2", "capacity"))]
+    assert select_modules("observability") == ["benchmarks.observability"]
+
+
+def test_select_modules_rejects_unknown_token():
+    from benchmarks.run import select_modules
+
+    with pytest.raises(SystemExit, match="matches no benchmark module"):
+        select_modules("fig1")  # was the substring footgun: fig13 != fig1
+    with pytest.raises(SystemExit, match="known:"):
+        select_modules("table2,nope")
+
+
+# ----------------------------------------------------------- report pipeline
+def _synthetic_artifacts(d, ok=True, us=100.0):
+    rows = {"r/a": {"us_per_call": us, "derived": "x", "ok": ok},
+            "r/b": {"us_per_call": 5.0, "derived": "y", "ok": None}}
+    with open(os.path.join(d, "BENCH_mod.json"), "w") as f:
+        json.dump({"module": "mod", "rows": rows}, f)
+    rec = MetricsRecorder()
+    rec.counter("c_total", kind="k")
+    rec.event("sub", "kind", t=1.0)
+    with rec.span("stage", phase="p"):
+        pass
+    write_artifacts(d, rec.snapshot(), run_manifest(seed=7))
+
+
+def test_report_render_and_diff(tmp_path):
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "report", os.path.join(os.path.dirname(__file__), "..",
+                               "tools", "report.py"))
+    report = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(report)
+
+    old, new = tmp_path / "old", tmp_path / "new"
+    old.mkdir(), new.mkdir()
+    _synthetic_artifacts(str(old), ok=True, us=100.0)
+    _synthetic_artifacts(str(new), ok=False, us=150.0)
+    rep = report.render_report(str(old))
+    assert "| mod | 2 | 1 | 0 |" in rep
+    assert "**seed**: `7`" in rep
+    assert "stage" in rep  # span flame summary
+    assert "| sub | kind | 1 |" in rep
+    diff = report.render_diff(str(old), str(new))
+    assert "Regressions" in diff and "r/a" in diff
+    assert "+50.0%" in diff
+    assert report.main([str(old)]) == 0
+    assert report.main([]) == 2
+
+
+# ---------------------------------------------------------- launcher logging
+def test_logging_env_level_and_stream():
+    from repro.obs import log as obslog
+
+    buf = io.StringIO()
+    old_env = os.environ.get(obslog.ENV_VAR)
+    os.environ[obslog.ENV_VAR] = "WARNING"
+    try:
+        obslog.setup_logging(stream=buf, force=True)
+        lg = obslog.get_logger("launch.test")
+        assert lg.name == "repro.launch.test"
+        lg.info("hidden")
+        lg.warning("arch=%s", "t5x")
+        assert buf.getvalue() == "arch=t5x\n"  # message-only, print-identical
+    finally:
+        if old_env is None:
+            os.environ.pop(obslog.ENV_VAR, None)
+        else:
+            os.environ[obslog.ENV_VAR] = old_env
+        obslog.setup_logging(force=True)  # restore default stderr handler
+
+
+def test_launchers_use_shared_logger():
+    import repro.launch.dryrun as dryrun
+    import repro.launch.serve as serve
+    import repro.launch.train as train
+
+    for mod in (dryrun, serve, train):
+        assert isinstance(mod.log, logging.Logger)
+        assert mod.log.name.startswith("repro.")

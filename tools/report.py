@@ -1,0 +1,196 @@
+#!/usr/bin/env python3
+"""Render (or diff) a benchmark artifacts directory as a markdown report.
+
+  PYTHONPATH=src python tools/report.py out/          # one-run report
+  PYTHONPATH=src python tools/report.py old/ new/     # perf-trajectory diff
+
+A report covers the run manifest, the PASS/FAIL table folded from every
+``BENCH_<module>.json``, a span "flame" summary (the wall-clock stage
+profile from ``metrics.prom``), and the top event counts from
+``events.jsonl``. The diff mode compares two artifact dirs row by row:
+validation regressions (PASS -> FAIL) and per-row timing deltas — the
+artifact pipeline's answer to "what did this PR do to the benchmarks".
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.export import (  # noqa: E402
+    EVENTS_NAME,
+    MANIFEST_NAME,
+    METRICS_NAME,
+    read_events,
+    read_manifest,
+    read_prometheus,
+)
+
+
+def _load_bench(d: str) -> dict:
+    """{module: {row_name: {us_per_call, derived, ok}} | None} from every
+    BENCH_*.json under ``d``."""
+    out = {}
+    for path in sorted(glob.glob(os.path.join(d, "BENCH_*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        out[rec.get("module",
+                    os.path.basename(path)[len("BENCH_"):-len(".json")])] = \
+            rec.get("rows")
+    return out
+
+
+def _flag(ok) -> str:
+    return "PASS" if ok is True else ("FAIL" if ok is False else "-")
+
+
+def render_report(d: str) -> str:
+    lines = [f"# Benchmark run report — `{d}`", ""]
+
+    # -- manifest ------------------------------------------------------------
+    manifest_path = os.path.join(d, MANIFEST_NAME)
+    if os.path.exists(manifest_path):
+        m = read_manifest(d)
+        lines += ["## Manifest", ""]
+        for key in ("kind", "quick", "seed", "git_sha", "python", "numpy",
+                    "jax", "platform", "wall_clock_s", "validation_failures"):
+            if key in m and m[key] is not None:
+                lines.append(f"- **{key}**: `{m[key]}`")
+        if m.get("argv"):
+            lines.append(f"- **argv**: `{' '.join(map(str, m['argv']))}`")
+        lines.append("")
+
+    # -- PASS/FAIL table -----------------------------------------------------
+    bench = _load_bench(d)
+    if bench:
+        lines += ["## Benchmarks", "",
+                  "| module | rows | pass | fail |",
+                  "|---|---:|---:|---:|"]
+        failures = []
+        for module, rows in bench.items():
+            if rows is None:
+                lines.append(f"| {module} | - | - | ERROR |")
+                failures.append((module, "<module raised>", ""))
+                continue
+            n_pass = sum(1 for r in rows.values() if r["ok"] is True)
+            n_fail = sum(1 for r in rows.values() if r["ok"] is False)
+            lines.append(f"| {module} | {len(rows)} | {n_pass} | {n_fail} |")
+            failures += [(module, name, r["derived"])
+                         for name, r in rows.items() if r["ok"] is False]
+        lines.append("")
+        if failures:
+            lines += ["### Failing rows", ""]
+            lines += [f"- `{mod}` / `{name}`: {derived}"
+                      for mod, name, derived in failures]
+            lines.append("")
+
+    # -- span flame summary --------------------------------------------------
+    metrics_path = os.path.join(d, METRICS_NAME)
+    if os.path.exists(metrics_path):
+        prom = read_prometheus(metrics_path)
+        sums = prom.get("summary", {})
+        spans = []
+        for name, series in sums.items():
+            if not name.endswith("_seconds_sum"):
+                continue
+            base = name[:-len("_seconds_sum")]
+            counts = {tuple(sorted(lb.items())): v for lb, v in
+                      sums.get(base + "_seconds_count", [])}
+            for labels, total in series:
+                key = tuple(sorted(labels.items()))
+                n = counts.get(key, 0.0)
+                spans.append((total, n, base, labels))
+        if spans:
+            lines += ["## Stage spans (wall-clock)", "",
+                      "| stage | labels | calls | total s | mean s |",
+                      "|---|---|---:|---:|---:|"]
+            for total, n, base, labels in sorted(spans, reverse=True)[:20]:
+                lb = ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+                mean = total / n if n else 0.0
+                lines.append(f"| {base} | {lb or '-'} | {n:.0f} "
+                             f"| {total:.3f} | {mean:.3f} |")
+            lines.append("")
+
+    # -- top events ----------------------------------------------------------
+    events_path = os.path.join(d, EVENTS_NAME)
+    if os.path.exists(events_path):
+        counts: dict = {}
+        for e in read_events(events_path):
+            key = (e.subsystem, e.kind)
+            counts[key] = counts.get(key, 0) + 1
+        if counts:
+            lines += ["## Events", "",
+                      "| subsystem | kind | count |", "|---|---|---:|"]
+            for (sub, kind), n in sorted(counts.items(),
+                                         key=lambda kv: -kv[1])[:15]:
+                lines.append(f"| {sub} | {kind} | {n} |")
+            lines.append(f"\n{sum(counts.values())} events total.")
+            lines.append("")
+    return "\n".join(lines)
+
+
+def render_diff(old: str, new: str) -> str:
+    """Row-by-row comparison of two artifact dirs."""
+    a, b = _load_bench(old), _load_bench(new)
+    lines = [f"# Benchmark diff — `{old}` -> `{new}`", ""]
+    regressions, fixes, timing = [], [], []
+    for module in sorted(set(a) | set(b)):
+        ra, rb = a.get(module), b.get(module)
+        if ra is None or rb is None:
+            lines.append(f"- `{module}`: only in "
+                         f"`{old if module in a else new}` (or raised)")
+            continue
+        for name in sorted(set(ra) | set(rb)):
+            va, vb = ra.get(name), rb.get(name)
+            if va is None or vb is None:
+                lines.append(f"- `{module}` / `{name}`: "
+                             f"{'removed' if vb is None else 'added'}")
+                continue
+            if va["ok"] != vb["ok"]:
+                (regressions if vb["ok"] is False else fixes).append(
+                    (module, name, _flag(va["ok"]), _flag(vb["ok"]),
+                     vb["derived"]))
+            ua, ub = va["us_per_call"], vb["us_per_call"]
+            if ua > 0 and ub > 0:
+                timing.append((ub / ua - 1.0, module, name, ua, ub))
+    if regressions:
+        lines += ["## Regressions", ""]
+        lines += [f"- `{m}` / `{n}`: {fa} -> {fb} — {d}"
+                  for m, n, fa, fb, d in regressions]
+        lines.append("")
+    if fixes:
+        lines += ["## Newly passing / changed validation", ""]
+        lines += [f"- `{m}` / `{n}`: {fa} -> {fb}"
+                  for m, n, fa, fb, _ in fixes]
+        lines.append("")
+    if timing:
+        lines += ["## Largest timing deltas", "",
+                  "| row | old us | new us | delta |", "|---|---:|---:|---:|"]
+        for delta, module, name, ua, ub in sorted(
+                timing, key=lambda x: -abs(x[0]))[:15]:
+            lines.append(f"| {module}/{name} | {ua:.1f} | {ub:.1f} "
+                         f"| {delta:+.1%} |")
+        lines.append("")
+    if not (regressions or fixes or timing):
+        lines.append("No comparable rows.")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) == 1:
+        print(render_report(argv[0]))
+        return 0
+    if len(argv) == 2:
+        print(render_diff(argv[0], argv[1]))
+        return 0
+    print(__doc__)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,31 @@ python -m benchmarks.run --quick --only site_hierarchy
 echo "== chaos-resilience quick benchmark =="
 python -m benchmarks.run --quick --only chaos_resilience
 
+echo "== observability quick benchmark =="
+python -m benchmarks.run --quick --only observability
+
+echo "== artifact pipeline (instrumented run -> manifest/metrics/events/report) =="
+ARTIFACTS_DIR="${ARTIFACTS_DIR:-out/smoke-artifacts}"
+rm -rf "$ARTIFACTS_DIR"
+python -m benchmarks.run --quick --only table2 --artifacts "$ARTIFACTS_DIR"
+python - "$ARTIFACTS_DIR" <<'EOF'
+import json, os, sys
+d = sys.argv[1]
+from repro.obs.export import read_events, read_manifest, read_prometheus
+man = read_manifest(d)
+assert man["numpy"] and "git_sha" in man, man
+read_prometheus(os.path.join(d, "metrics.prom"))
+read_events(os.path.join(d, "events.jsonl"))
+bench = [p for p in os.listdir(d) if p.startswith("BENCH_") and p.endswith(".json")]
+assert bench, f"no BENCH_*.json under {d}"
+for p in bench:
+    with open(os.path.join(d, p)) as f:
+        assert json.load(f)["rows"] is not None, f"{p}: module raised"
+print(f"artifacts OK: {sorted(os.listdir(d))}")
+EOF
+python tools/report.py "$ARTIFACTS_DIR" > "$ARTIFACTS_DIR/report.md"
+echo "report: $ARTIFACTS_DIR/report.md"
+
 echo "== scenario + registry docs sync check =="
 python tools/gen_scenario_docs.py --check
 

@@ -1,0 +1,183 @@
+"""Online alerting guarantees: detection latency, zero false alarms,
+incident reconciliation, zero perturbation (DESIGN.md §15).
+
+Validates the hard claims the ``repro.obs`` online half (streaming windows
++ :class:`~repro.obs.alerts.AlertEngine`) ships under, on the registered
+``chaos-*`` family and its default alert pack:
+
+  * **a PDU loss is detected within one telemetry tick of the derate
+    landing** — a step derate on ``pdu0`` crosses the cap-proximity rule on
+    the very next tick; a ramped derate is caught no later than its apply
+    record (the fraction crosses the engage threshold as the ramp tops
+    out);
+  * **zero false alarms on a healthy site** — ``chaos-noop`` (same traffic,
+    no faults) produces no alert engages over the full run;
+  * **incident reconstruction reconciles 1:1 with the fault audit log** —
+    folding the event trace back into incidents recovers exactly the
+    ``FleetResult.fault_events`` windows, with the engage times the engine
+    actually emitted and no unattributed engages;
+  * **alerting observes, never perturbs** — alerts-on and alerts-off runs
+    are bit-identical (latencies, power series, routing decisions, budget
+    trajectories), and the instrumented run costs <= 5% wall clock.
+"""
+
+from __future__ import annotations
+
+import gc
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, module_main, seeded
+from repro.chaos import FaultEvent, FaultSpec
+from repro.experiments import get_scenario, run_experiment
+from repro.obs import alerts as obs_alerts
+from repro.obs.incidents import reconstruct_incidents
+from repro.obs.metrics import MetricsRecorder, recording
+
+
+def _first_detection(alert_events):
+    """Earliest telemetry-driven engage (fault-active is ground truth the
+    injector hands the engine, not detection)."""
+    return min((a.t for a in alert_events
+                if a.phase == "engage" and a.kind != "fault-active"),
+               default=None)
+
+
+def run(quick: bool = False) -> Bench:
+    b = Bench()
+    # the fault window (2400 s -> 4800 s) and the default pack's thresholds
+    # are the registered chaos operating point; quick trims the tail, not
+    # the window
+    dur = 7200.0
+    base = seeded(get_scenario("chaos-pdu-loss-tree")).with_(
+        duration_s=dur, compare_to_reference=False)
+    tick = base.telemetry.telemetry_s
+
+    # ---- step derate: detected on the next telemetry tick ------------------
+    step = base.with_faults(FaultSpec((
+        FaultEvent("node-derate", t=2400.0, node="pdu0", factor=0.7,
+                   until=4800.0, ramp_s=0.0),)))
+    t0 = time.perf_counter()
+    so = run_experiment(step)
+    us = (time.perf_counter() - t0) * 1e6
+    sf = so.fleet
+    t_apply = min(r.t for r in sf.fault_events if r.phase == "apply")
+    det = _first_detection(sf.alert_events)
+    lat = None if det is None else det - t_apply
+    ok = lat is not None and 0.0 <= lat <= tick + 1e-9
+    b.add("alerting/step_detection",
+          f"30% pdu0 step at t={t_apply:g}s detected at t="
+          f"{det if det is None else f'{det:g}'}s — "
+          f"{'-' if lat is None else f'{lat:g}'}s "
+          f"<= 1 telemetry tick ({tick:g}s); "
+          f"{sf.n_alert_events} alert transitions", us, ok)
+
+    # ---- ramped derate: caught no later than the apply record --------------
+    # (recorded run — the same trace feeds the incident-reconcile row)
+    rec = MetricsRecorder()
+    t0 = time.perf_counter()
+    with recording(rec):
+        ro = run_experiment(base)
+    us = (time.perf_counter() - t0) * 1e6
+    rf = ro.fleet
+    r_apply = min(r.t for r in rf.fault_events if r.phase == "apply")
+    r_sched = r_apply - base.faults.events[0].ramp_s
+    r_det = _first_detection(rf.alert_events)
+    r_ok = r_det is not None and r_sched <= r_det <= r_apply + tick + 1e-9
+    b.add("alerting/ramp_detection",
+          f"ramped derate (sched t={r_sched:g}s, lands t={r_apply:g}s) "
+          f"detected at t={r_det if r_det is None else f'{r_det:g}'}s — "
+          f"within one tick of landing", us, r_ok)
+
+    # ---- incident reconstruction reconciles with the fault audit log -------
+    snap = rec.snapshot()
+    rep = reconstruct_incidents(snap.events)
+    want = sorted((r.t, r.target) for r in rf.fault_events
+                  if r.phase == "apply" and r.kind != "row-revive")
+    got = sorted((i.t_apply, i.target) for i in rep.incidents)
+    restores = sorted(r.t for r in rf.fault_events if r.phase == "restore")
+    got_restores = sorted(i.t_restore for i in rep.incidents
+                          if i.t_restore is not None)
+    det_match = (rep.incidents
+                 and rep.incidents[0].first_detection() is not None
+                 and rep.incidents[0].first_detection().t_engage == r_det)
+    reconciled = (want == got and restores == got_restores
+                  and rep.n_false_alarms == 0 and bool(det_match))
+    b.add("alerting/incident_reconcile",
+          f"{rep.n_incidents} incident(s) == {len(want)} fault window(s), "
+          f"restores match, first detection t="
+          f"{r_det if r_det is None else f'{r_det:g}'}s, "
+          f"{rep.n_false_alarms} unattributed engages "
+          f"({rep.n_events} trace events)", 0.0, reconciled)
+
+    # ---- healthy site: zero false alarms -----------------------------------
+    noop = seeded(get_scenario("chaos-noop")).with_(
+        compare_to_reference=False)
+    if quick:
+        noop = noop.with_(duration_s=dur)
+    t0 = time.perf_counter()
+    no = run_experiment(noop)
+    us = (time.perf_counter() - t0) * 1e6
+    n_eng = sum(1 for a in no.fleet.alert_events if a.phase == "engage")
+    b.add("alerting/noop_false_alarms",
+          f"chaos-noop over {noop.duration_s / 3600:g}h under the default "
+          f"pack: {n_eng} alert engages (want 0)", us, n_eng == 0)
+
+    # ---- alerts-on == alerts-off, <= 5% overhead ---------------------------
+    # the overhead is attributed directly: every AlertEngine.on_tick call
+    # inside one alerted run is timed in place, and the gate compares that
+    # accumulated engine time against the rest of the run. A/B wall-clock
+    # ratios of whole runs measure the machine more than the engine — on a
+    # shared host, run-to-run scheduling noise alone swings several times
+    # the 5% being gated. Timed with the process recorder detached (under
+    # ``--artifacts`` the harness recorder's bookkeeping would inflate
+    # both sides with unrelated cost) and a GC pass before each run.
+    off_sc = base.with_(alerts=None)
+    acc = [0.0, 0]
+    orig_on_tick = obs_alerts.AlertEngine.on_tick
+
+    def _timed_on_tick(self, *a, **k):
+        t0 = time.perf_counter()
+        out = orig_on_tick(self, *a, **k)
+        acc[0] += time.perf_counter() - t0
+        acc[1] += 1
+        return out
+
+    with recording(None):
+        gc.collect()
+        off = run_experiment(off_sc)
+        obs_alerts.AlertEngine.on_tick = _timed_on_tick
+        try:
+            gc.collect()
+            t0 = time.perf_counter()
+            on = run_experiment(base)
+            wall = time.perf_counter() - t0
+        finally:
+            obs_alerts.AlertEngine.on_tick = orig_on_tick
+    fo, fn = off.fleet, on.fleet
+    bit = (off.result.latencies == on.result.latencies
+           and np.array_equal(fo.cluster_power_frac, fn.cluster_power_frac)
+           and np.array_equal(fo.row_power_frac, fn.row_power_frac)
+           and np.array_equal(fo.node_budget_w, fn.node_budget_w)
+           and fo.decisions == fn.decisions
+           and fo.n_shed == fn.n_shed
+           and fo.fault_events == fn.fault_events
+           and not fo.alert_events and fn.n_alert_events > 0)
+    b.add("alerting/bit_parity",
+          f"alerts-on == alerts-off bit-for-bit over the fault run: {bit} "
+          f"({fn.n_alert_events} transitions recorded on the on-side)",
+          0.0, bit)
+    # engine seconds on top of everything else the run did: equivalent to
+    # the alerted/bare wall-clock ratio, without differencing two noisy
+    # whole-run timings
+    ratio = wall / (wall - acc[0])
+    b.add("alerting/overhead",
+          f"engine {acc[0] * 1e3:.0f}ms over {acc[1]} ticks "
+          f"({acc[0] * 1e6 / max(acc[1], 1):.1f}us/tick) of a {wall:.2f}s "
+          f"run (x{ratio:.3f})", acc[0] * 1e6, ratio <= 1.05)
+    return b
+
+
+if __name__ == "__main__":
+    module_main(run)

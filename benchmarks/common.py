@@ -65,12 +65,17 @@ def module_main(run_fn: Callable) -> None:
                          "events + BENCH_<module>.json under DIR")
     args = ap.parse_args()
     set_seed(args.seed)
+    # progress to stderr through the shared repro logger (REPRO_LOG_LEVEL
+    # gates it); the CSV contract on stdout is untouched
+    from repro.obs.log import get_logger
+    log = get_logger("benchmarks")
+    basename = os.path.splitext(os.path.basename(sys.argv[0]))[0]
+    log.info("%s ...%s", basename, " (quick)" if args.quick else "")
+    t0 = time.perf_counter()
     if args.artifacts:
         from repro.obs.export import run_manifest, write_artifacts
         from repro.obs.metrics import MetricsRecorder, recording
-        basename = os.path.splitext(os.path.basename(sys.argv[0]))[0]
         rec = MetricsRecorder()
-        t0 = time.perf_counter()
         with recording(rec), rec.span("bench/module", module=basename):
             bench = run_fn(quick=args.quick)
         write_bench_json(args.artifacts, basename, bench.rows)
@@ -81,6 +86,9 @@ def module_main(run_fn: Callable) -> None:
                    "wall_clock_s": round(time.perf_counter() - t0, 3)}))
     else:
         bench = run_fn(quick=args.quick)
+    log.info("%s: %d rows, %d failing, %.1fs", basename, len(bench.rows),
+             sum(1 for r in bench.rows if r.ok is False),
+             time.perf_counter() - t0)
     for row in bench.rows:
         print(row.csv())
 

@@ -46,6 +46,7 @@ MODULES = [
     "benchmarks.kernel_micro",
     "benchmarks.roofline_table",
     "benchmarks.observability",
+    "benchmarks.alerting",
 ]
 
 
@@ -97,11 +98,18 @@ def main() -> None:
         rec = MetricsRecorder()
         set_recorder(rec)
 
+    # progress to stderr via the shared repro logger (REPRO_LOG_LEVEL
+    # gates it); stdout stays pure CSV
+    from repro.obs.log import get_logger
+    log = get_logger("benchmarks.run")
+
     t0 = time.perf_counter()
     print("name,us_per_call,derived[,validation]")
     n_fail = 0
-    for modname in modules:
+    for i, modname in enumerate(modules, 1):
         basename = modname.rsplit(".", 1)[-1]
+        log.info("[%d/%d] %s ...", i, len(modules), basename)
+        t_mod = time.perf_counter()
         try:
             mod = importlib.import_module(modname)
             if rec is not None:
@@ -115,10 +123,16 @@ def main() -> None:
                     n_fail += 1
             if args.artifacts:
                 common.write_bench_json(args.artifacts, basename, bench.rows)
+            mod_fail = sum(1 for r in bench.rows if r.ok is False)
+            log.info("[%d/%d] %s: %d rows, %d failing, %.1fs",
+                     i, len(modules), basename, len(bench.rows), mod_fail,
+                     time.perf_counter() - t_mod)
         except Exception:
             print(f"{modname},0.0,EXCEPTION,FAIL")
             traceback.print_exc()
             n_fail += 1
+            log.error("[%d/%d] %s: raised after %.1fs", i, len(modules),
+                      basename, time.perf_counter() - t_mod)
             if args.artifacts:
                 common.write_bench_json(args.artifacts, basename, None)
         sys.stdout.flush()

@@ -170,7 +170,8 @@ class ChaosInjector:
                 factor=1.0, node_budgets_before_w=before,
                 node_budgets_after_w=h.node_budget_w.copy(),
                 detail=f"scheduled t={e.t:g}s"))
-            self._record_transition(t, e.kind, h.names[int(e.row)], "apply")
+            self._record_transition(t, e.kind, h.names[int(e.row)], "apply",
+                                    e.t)
         for d in self._derates:
             self._poll_derate(d, t, fleet)
 
@@ -195,7 +196,8 @@ class ChaosInjector:
                     node_budgets_after_w=h.node_budget_w.copy(),
                     detail=(f"-{d.applied_delta_w:.0f} W"
                             + (f" over {e.ramp_s:g}s ramp" if e.ramp_s else ""))))
-                self._record_transition(t, e.kind, h.names[d.node], "apply")
+                self._record_transition(t, e.kind, h.names[d.node], "apply",
+                                        e.t)
         if d.done and not d.restored and e.until is not None and t >= e.until:
             before = h.node_budget_w.copy()
             self._restore(fleet, d, t)
@@ -206,18 +208,33 @@ class ChaosInjector:
                 factor=e.factor, node_budgets_before_w=before,
                 node_budgets_after_w=h.node_budget_w.copy(),
                 detail=f"+{d.applied_delta_w:.0f} W returned"))
-            self._record_transition(t, e.kind, h.names[d.node], "restore")
+            self._record_transition(t, e.kind, h.names[d.node], "restore",
+                                    e.until)
+
+    def n_active_derates(self) -> int:
+        """Budget derates currently in force: started (a ramp in progress
+        counts) and not yet restored. Fenced rows are tracked by the
+        fleet's ``row_alive`` mask, not here. Read-only — the fault-active
+        alert rule polls this as its ground-truth signal."""
+        return sum(1 for d in self._derates
+                   if not d.restored
+                   and (d.done or d.cum < 1.0 - _CUM_ATOL))
 
     @staticmethod
     def _record_transition(t: float, kind: str, target: str,
-                           phase: str) -> None:
+                           phase: str, t_sched: float) -> None:
         """Mirror a fault phase transition into the observability event
-        trace — one event + counter per FaultRecord, write-only."""
+        trace — one event + counter per FaultRecord, write-only.
+        ``t_sched`` is the timeline's scheduled time for this phase (the
+        event's ``t``, or ``until`` for restores): incident reconstruction
+        measures detection latency against it, since a ramped derate's
+        apply record only lands when the ramp completes."""
         rec = get_recorder()
         if rec.enabled:
             rec.event("chaos",
                       "fault_apply" if phase == "apply" else "fault_restore",
-                      t=t, fault=kind, target=target, phase=phase)
+                      t=t, fault=kind, target=target, phase=phase,
+                      t_sched=round(t_sched, 6))
             rec.counter("chaos_fault_transitions_total",
                         kind=kind, phase=phase)
 

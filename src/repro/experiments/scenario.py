@@ -21,6 +21,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.chaos.faults import FaultEvent, FaultSpec
+from repro.obs.alerts import AlertSpec, coerce_alerts, default_alert_pack
 from repro.core.policy import NoCap, OneThreshold, PolcaPolicy, PredictivePolcaPolicy
 from repro.core.power_model import A100, TPU_V5E, DevicePower, ServerPower
 from repro.core.slo import DEFAULT_SLO, SLO
@@ -215,6 +216,11 @@ class Scenario:
     # repro.chaos.ChaosInjector. Requires routing; None or an empty spec is
     # exactly the fault-free fleet (bit-identical, tier-1-asserted)
     faults: Optional[FaultSpec] = None
+    # online alerting: AlertSpec rules evaluated per telemetry tick by an
+    # obs.alerts.AlertEngine on the fleet lockstep. Requires routing;
+    # write-only (alerts-on is bit-identical to alerts-off except for
+    # FleetResult.alert_events, tier-1-asserted); None or () disables
+    alerts: Optional[Tuple[AlertSpec, ...]] = None
 
     def with_(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
@@ -252,6 +258,13 @@ class Scenario:
             faults = FaultSpec(tuple(faults))
         return self.with_(faults=faults)
 
+    def with_alerts(self, alerts) -> "Scenario":
+        """Same scenario under an alert rule set: an iterable of
+        :class:`~repro.obs.alerts.AlertSpec` (or their dicts), or ``None``
+        to clear. Alerting is write-only, so every variant replays the
+        unalerted scenario bit for bit."""
+        return self.with_(alerts=coerce_alerts(alerts))
+
     def with_hierarchy(self, shape: Tuple[int, ...], **kw) -> "Scenario":
         """Same scenario under an explicit budget tree (and a fleet sized to
         match: ``n_rows`` is set to ``prod(shape)``). Keyword args pass to
@@ -287,6 +300,8 @@ class Scenario:
             d["hierarchy"] = HierarchySpec(**h)
         if d.get("faults") is not None:
             d["faults"] = FaultSpec.from_dict(d["faults"])
+        if d.get("alerts") is not None:
+            d["alerts"] = coerce_alerts(d["alerts"])
         return cls(**d)
 
     def to_json(self) -> str:
@@ -509,6 +524,11 @@ SITE_SCENARIO_FAMILY: List[str] = [
 # * chaos-demand-response — a grid event ramps the *site* envelope down 15%
 #                        over 10 min and restores it later; tree-scope
 #                        rebalancing follows the shrinking root.
+#
+# The whole family carries the default alert pack (obs.alerts): alerting is
+# write-only, so the rules ride along without moving a bit of any series —
+# chaos-noop doubles as the zero-false-alarm anchor, and the pdu-loss
+# variants are the detection-latency yardstick (benchmarks/alerting.py).
 _CHAOS_BASE = Scenario(
     name="chaos-pdu-loss-static",
     duration_s=DAY / 4,
@@ -521,8 +541,10 @@ _CHAOS_BASE = Scenario(
     budget=105_000.0,
     faults=FaultSpec((FaultEvent("node-derate", t=2400.0, node="pdu0",
                                  factor=0.7, until=4800.0, ramp_s=120.0),)),
+    alerts=default_alert_pack(),
 )
-register_scenario(_SITE_BASE.with_(name="chaos-noop", faults=FaultSpec()))
+register_scenario(_SITE_BASE.with_(name="chaos-noop", faults=FaultSpec(),
+                                   alerts=default_alert_pack()))
 register_scenario(_CHAOS_BASE)
 register_scenario(_CHAOS_BASE.with_controller("predictive", scope="tree")
                   .with_(name="chaos-pdu-loss-tree",

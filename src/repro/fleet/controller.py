@@ -48,6 +48,7 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from repro.obs.metrics import get_recorder
+from repro.obs.stream import OOB_HORIZON_S
 
 CONSERVATION_ATOL = 1e-6  # watts; rebalances re-normalize exactly
 
@@ -86,10 +87,15 @@ class PowerForecaster:
     predictive capping, vectorized over rows. Forecasts are clamped from
     below at the current measurement (a falling trend never *frees* budget
     early; rising trends claim it early), matching the policy's
-    cap-early-never-uncap-early asymmetry.
+    cap-early-never-uncap-early asymmetry. The default horizon is the
+    shared :data:`~repro.obs.stream.OOB_HORIZON_S` constant, so the
+    controller's forecast and the alerting stream's EWMA projection
+    (:class:`~repro.obs.stream.EwmaSlope`) always reason about the same
+    future instant.
     """
 
-    def __init__(self, n_rows: int, *, horizon_s: float = 40.0, window: int = 8):
+    def __init__(self, n_rows: int, *,
+                 horizon_s: float = OOB_HORIZON_S, window: int = 8):
         self.horizon_s = float(horizon_s)
         self.window = int(window)
         self._t: List[float] = []

@@ -39,6 +39,7 @@ from repro.core.slo import LatencyStats
 # next to build_fleet
 from repro.experiments.runner import row_budgets  # noqa: F401
 from repro.fleet.controller import FleetController, PowerForecaster, RebalanceEvent
+from repro.obs.alerts import AlertEngine, AlertEvent, AlertSpec, coerce_alerts
 from repro.obs.metrics import get_recorder
 from repro.fleet.router import (
     AdmissionController,
@@ -98,6 +99,11 @@ class FleetResult:
     # and the per-tick row-liveness mask crashes/revivals toggled
     fault_events: List[FaultRecord] = field(default_factory=list, repr=False)
     row_alive: np.ndarray = field(default=None, repr=False)  # [T, R] bool
+    # online alerting audit (empty without Scenario.alerts): every
+    # engage/release transition the AlertEngine fired on the tick lockstep
+    # (obs.alerts.AlertEvent) — write-only, so carrying alerts never
+    # changes any other field (tier-1-asserted)
+    alert_events: List[AlertEvent] = field(default_factory=list, repr=False)
 
     @property
     def n_rebalances(self) -> int:
@@ -106,6 +112,16 @@ class FleetResult:
     @property
     def n_fault_events(self) -> int:
         return len(self.fault_events)
+
+    @property
+    def n_alert_events(self) -> int:
+        return len(self.alert_events)
+
+    def alerts_of(self, phase: Optional[str] = None,
+                  kind: Optional[str] = None) -> List[AlertEvent]:
+        return [a for a in self.alert_events
+                if (phase is None or a.phase == phase)
+                and (kind is None or a.kind == kind)]
 
     def budget_moved_w(self) -> float:
         """Total watts of budget the controller moved over the run."""
@@ -186,7 +202,8 @@ class FleetSimulator:
                  telemetry_s: Optional[float] = None,
                  controller: Optional[FleetController] = None,
                  hierarchy: Optional[PowerHierarchy] = None,
-                 chaos: Optional[ChaosInjector] = None):
+                 chaos: Optional[ChaosInjector] = None,
+                 alerts: Optional[List[AlertSpec]] = None):
         if not rows:
             raise ValueError("FleetSimulator needs at least one row")
         from repro.experiments.cluster import resolve_row_hierarchy
@@ -223,6 +240,18 @@ class FleetSimulator:
         self.chaos = chaos
         if chaos is not None:
             chaos.bind(self)  # validates the timeline before anything runs
+
+        # online alerting: the engine evaluates its rule set against each
+        # tick's already-sampled telemetry, after the chaos poll. Strictly
+        # write-only (events out, nothing read back into control flow), so
+        # an alerted fleet replays an unalerted one bit for bit.
+        specs = coerce_alerts(alerts)
+        self.alert_engine = (
+            AlertEngine(specs, tick_s=self.telemetry_s,
+                        horizon_s=rows[0].cfg.oob_latency_s)
+            if specs else None)
+        if self.alert_engine is not None:
+            self.alert_engine.bind(self)  # validates node targets up front
 
         self.decisions: List[RoutingDecision] = []
         self.n_shed: Dict[str, int] = {"high": 0, "low": 0}
@@ -278,6 +307,12 @@ class FleetSimulator:
                        if getattr(r.policy, "braked", False))
         return FleetView(t=t, cluster_frac=self._stale_cluster_frac,
                          n_braked=n_braked)
+
+    @property
+    def n_processed(self) -> int:
+        """Arrivals the dispatcher has consumed so far (dispatched or
+        shed) — the alert engine's offered-traffic denominator."""
+        return self._i
 
     def set_row_alive(self, i: int, alive: bool) -> None:
         """Fence (or unfence) row ``i`` from dispatch — the chaos engine's
@@ -392,6 +427,14 @@ class FleetSimulator:
                     # actuation delay a real OOB plane has
                     self.chaos.poll(self._next_tick, self)
                     self._alive_samples.append(self.row_alive.copy())
+                if self.alert_engine is not None:
+                    # alert evaluation closes the tick: it sees the budgets
+                    # this tick's fractions were measured against (pre-
+                    # controller, matching FleetResult.node_power_frac) and
+                    # the post-poll chaos state, and writes nothing back
+                    self.alert_engine.on_tick(
+                        self._next_tick, self, row_w, budgets,
+                        self._interior_budget_samples[-1])
                 self._prev_row_w = row_w
                 self._next_tick += self.telemetry_s
         return not (self._i >= len(self.requests)
@@ -448,6 +491,8 @@ class FleetSimulator:
                           if self.chaos is not None else []),
             row_alive=(np.stack(self._alive_samples)
                        if self._alive_samples else None),
+            alert_events=(list(self.alert_engine.events)
+                          if self.alert_engine is not None else []),
         )
 
     def run(self) -> FleetResult:
@@ -502,6 +547,13 @@ def build_fleet(scenario, workloads, shares, server,
     only the row-crash/revive subset: a crash is an environmental capacity
     loss both twins must see, while budget derates are power-plane events
     the uncapped baseline by definition doesn't have.
+
+    A scenario carrying ``Scenario.alerts`` gets an
+    :class:`~repro.obs.alerts.AlertEngine` evaluating those rules on the
+    tick lockstep (write-only: transitions land in
+    ``FleetResult.alert_events`` and the recorder, never in control flow).
+    References never carry alerts — the uncapped twin has no power plane
+    to alarm on.
     """
     from repro.core.policy import NoCap
     from repro.experiments.runner import row_sim
@@ -540,6 +592,7 @@ def build_fleet(scenario, workloads, shares, server,
         fspec = fspec.routing_only()
     chaos = (ChaosInjector(fspec)
              if fspec is not None and not fspec.is_noop else None)
+    aspecs = getattr(scenario, "alerts", None)
     return FleetSimulator(
         rows, requests,
         router=build_router(spec.router, spec.params),
@@ -548,4 +601,5 @@ def build_fleet(scenario, workloads, shares, server,
         telemetry_s=scenario.telemetry.telemetry_s,
         controller=controller,
         hierarchy=hierarchy,
-        chaos=chaos)
+        chaos=chaos,
+        alerts=None if reference else aspecs)

@@ -153,9 +153,12 @@ class Event:
 class MetricsSnapshot:
     """A detached, mergeable copy of a recorder's state. ``merge`` is the
     fork-pool reconciliation primitive: counters and histograms add, gauges
-    are last-write-wins in merge order, spans fold their aggregates, events
-    concatenate in order — so merging per-member snapshots in member order
-    yields a worker-count-invariant result."""
+    take the **max** per key (order-independent — the gauges the stack
+    records are peaks/extents, so max is the only fold that makes merging
+    per-member snapshots commutative; last-write-wins would depend on
+    worker scheduling), spans fold their aggregates, events concatenate in
+    order — so merging per-member snapshots in member order yields a
+    worker-count-invariant result."""
 
     counters: Dict[MetricKey, float] = field(default_factory=dict)
     gauges: Dict[MetricKey, float] = field(default_factory=dict)
@@ -166,7 +169,9 @@ class MetricsSnapshot:
     def merge(self, other: "MetricsSnapshot") -> "MetricsSnapshot":
         for k, v in other.counters.items():
             self.counters[k] = self.counters.get(k, 0.0) + v
-        self.gauges.update(other.gauges)
+        for k, v in other.gauges.items():
+            self.gauges[k] = v if k not in self.gauges \
+                else max(self.gauges[k], v)
         for k, h in other.hists.items():
             if k in self.hists:
                 self.hists[k].merge(h)
@@ -344,7 +349,7 @@ class MetricsRecorder(NullRecorder):
 
     def merge_snapshot(self, snap: MetricsSnapshot) -> None:
         """Fold a (worker) snapshot into this recorder, with snapshot-merge
-        semantics (counters/hists add, gauges last-write-wins, events
+        semantics (counters/hists add, gauges take the per-key max, events
         append in order)."""
         mine = MetricsSnapshot(self.counters, self.gauges, self.hists,
                                self.spans, self.events)

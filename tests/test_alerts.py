@@ -1,0 +1,328 @@
+"""Alerting engine: spec validation, hysteresis, bind-time target checks,
+recorder emission, and the zero-perturbation contract (repro.obs.alerts)."""
+
+import numpy as np
+import pytest
+
+from repro.core.hierarchy import PowerHierarchy
+from repro.obs.alerts import (
+    ALERT_BUILDERS,
+    ANY_NODE,
+    AlertEngine,
+    AlertSpec,
+    coerce_alerts,
+    default_alert_pack,
+)
+from repro.obs.metrics import MetricsRecorder, recording
+
+TICK = 2.0
+
+
+# ----------------------------------------------------------- spec validation
+
+def test_spec_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown kind"):
+        AlertSpec("not-a-rule")
+
+
+def test_spec_engage_below_release_rejected():
+    with pytest.raises(ValueError, match="engage must be >= release"):
+        AlertSpec("cap-proximity", engage=0.5, release=0.9)
+
+
+def test_spec_projected_requires_root_target():
+    with pytest.raises(ValueError, match="root slope"):
+        AlertSpec("cap-proximity", target="pdu0", projected=True)
+
+
+def test_spec_rate_rules_are_fleet_wide():
+    with pytest.raises(ValueError, match="fleet-wide"):
+        AlertSpec("brake-storm", target="row0", engage=5.0)
+    with pytest.raises(ValueError, match="fleet-wide"):
+        AlertSpec("slo-burn", target="row0", engage=0.1, release=0.0)
+
+
+def test_spec_conservation_rejects_any_node():
+    with pytest.raises(ValueError):
+        AlertSpec("conservation-violation", target=ANY_NODE)
+
+
+def test_spec_auto_name_and_registry():
+    s = AlertSpec("cap-proximity", target="pdu0")
+    assert s.name == "cap-proximity:pdu0"
+    assert AlertSpec("brake-storm", engage=5.0).name == "brake-storm"
+    assert set(ALERT_BUILDERS) == {
+        "cap-proximity", "brake-storm", "slo-burn",
+        "conservation-violation", "fault-active"}
+
+
+def test_spec_dict_round_trip():
+    s = AlertSpec("slo-burn", engage=0.1, release=0.01, window_s=120.0,
+                  for_ticks=3)
+    assert AlertSpec.from_dict(s.to_dict()) == s
+    assert coerce_alerts([s.to_dict()]) == (s,)
+    assert coerce_alerts(None) is None
+
+
+def test_default_pack_is_valid_and_named_uniquely():
+    pack = default_alert_pack()
+    names = [s.name for s in pack]
+    assert len(names) == len(set(names))
+    kinds = {s.kind for s in pack}
+    assert kinds == set(ALERT_BUILDERS)
+
+
+def test_scenario_carries_alerts_through_json():
+    from repro.experiments.scenario import Scenario, get_scenario
+    sc = get_scenario("chaos-noop")
+    assert sc.alerts  # the chaos family ships the default pack
+    assert Scenario.from_json(sc.to_json()) == sc
+    cleared = sc.with_alerts(None)
+    assert cleared.alerts is None
+
+
+# ------------------------------------------------- engine against a stub fleet
+
+class _Policy:
+    def __init__(self):
+        self.braked = False
+
+
+class _Row:
+    def __init__(self):
+        self.policy = _Policy()
+
+
+class _StubChaos:
+    def __init__(self, n=0):
+        self.n = n
+
+    def n_active_derates(self):
+        return self.n
+
+
+class _StubFleet:
+    """The attribute surface AlertEngine reads: hierarchy, rows (brake
+    flags), shed/offered counters, row liveness, chaos."""
+
+    def __init__(self, h):
+        self.hierarchy = h
+        self.rows = [_Row() for _ in range(h.n_leaves)]
+        self.n_shed = {"high": 0, "low": 0}
+        self.row_alive = np.ones(h.n_leaves, dtype=bool)
+        self.chaos = None
+        self.n_processed = 0
+
+
+def _site():
+    # 4 rows of 100 W under 2 PDUs (200 W each) and a 400 W site root
+    return PowerHierarchy.from_shape((2, 2), [100.0] * 4)
+
+
+def _tick(engine, fleet, t, row_w):
+    h = fleet.hierarchy
+    leaf = h.node_budget_w[:h.n_leaves]
+    interior = h.node_budget_w[h.n_leaves:]
+    engine.on_tick(t, fleet, np.asarray(row_w, dtype=float), leaf, interior)
+
+
+def _engine(fleet, *specs):
+    e = AlertEngine(specs, tick_s=TICK)
+    e.bind(fleet)
+    return e
+
+
+def test_engine_rejects_duplicate_names():
+    with pytest.raises(ValueError, match="duplicate alert names"):
+        AlertEngine([AlertSpec("cap-proximity"), AlertSpec("cap-proximity")],
+                    tick_s=TICK)
+
+
+def test_bind_rejects_unknown_target():
+    f = _StubFleet(_site())
+    e = AlertEngine([AlertSpec("cap-proximity", target="pdu9")], tick_s=TICK)
+    with pytest.raises(ValueError, match="no hierarchy node named"):
+        e.bind(f)
+
+
+def test_bind_rejects_leaf_conservation_target():
+    f = _StubFleet(_site())
+    e = AlertEngine([AlertSpec("conservation-violation", target="row0")],
+                    tick_s=TICK)
+    with pytest.raises(ValueError, match="interior node"):
+        e.bind(f)
+
+
+def test_hysteresis_engage_release_cycle():
+    f = _StubFleet(_site())
+    e = _engine(f, AlertSpec("cap-proximity", target="pdu0", engage=0.9,
+                             release=0.8, for_ticks=2))
+    quiet = [10.0, 10.0, 10.0, 10.0]
+    hot = [95.0, 95.0, 0.0, 0.0]      # pdu0 at 0.95
+    band = [85.0, 85.0, 0.0, 0.0]     # 0.85: inside the hysteresis band
+    cool = [70.0, 70.0, 0.0, 0.0]     # 0.70: below release
+    _tick(e, f, 2.0, quiet)
+    _tick(e, f, 4.0, hot)             # streak 1 of 2: no event yet
+    assert e.events == []
+    _tick(e, f, 6.0, hot)             # streak 2: engage
+    assert [(a.phase, a.t) for a in e.events] == [("engage", 6.0)]
+    assert e.n_active == 1
+    _tick(e, f, 8.0, band)            # in-band: must NOT release (no flap)
+    _tick(e, f, 10.0, band)
+    assert len(e.events) == 1
+    _tick(e, f, 12.0, cool)           # streak 1 of 2
+    _tick(e, f, 14.0, cool)           # streak 2: release
+    assert [(a.phase, a.t) for a in e.events] == [("engage", 6.0),
+                                                  ("release", 14.0)]
+    assert e.n_active == 0
+    eng, rel = e.events
+    assert eng.value == pytest.approx(0.95)
+    assert eng.threshold == 0.9 and rel.threshold == 0.8
+
+
+def test_hysteresis_streak_resets_on_dip():
+    f = _StubFleet(_site())
+    e = _engine(f, AlertSpec("cap-proximity", target="pdu0", engage=0.9,
+                             release=0.8, for_ticks=2))
+    hot, quiet = [95.0, 95.0, 0, 0], [10.0, 10.0, 10, 10]
+    _tick(e, f, 2.0, hot)
+    _tick(e, f, 4.0, quiet)  # dip resets the engage streak
+    _tick(e, f, 6.0, hot)
+    assert e.events == []    # never held for 2 consecutive ticks
+
+
+def test_any_node_tracks_worst():
+    f = _StubFleet(_site())
+    e = _engine(f, AlertSpec("cap-proximity", target=ANY_NODE, engage=1.0,
+                             release=0.5))
+    _tick(e, f, 2.0, [101.0, 0.0, 0.0, 0.0])  # row0 over its own budget
+    assert [(a.phase, a.t) for a in e.events] == [("engage", 2.0)]
+    assert e.events[0].value == pytest.approx(1.01)
+
+
+def test_brake_storm_counts_edges_in_window():
+    f = _StubFleet(_site())
+    e = _engine(f, AlertSpec("brake-storm", engage=2.0, release=0.5,
+                             window_s=4.0))  # 2-tick window
+    w = [10.0] * 4
+    _tick(e, f, 2.0, w)
+    f.rows[0].policy.braked = True
+    f.rows[1].policy.braked = True
+    _tick(e, f, 4.0, w)  # 2 edges this tick -> window sum 2 -> engage
+    assert [(a.phase, a.t) for a in e.events] == [("engage", 4.0)]
+    f.rows[0].policy.braked = False
+    f.rows[1].policy.braked = False
+    _tick(e, f, 6.0, w)   # 2 more edges: stays active
+    _tick(e, f, 8.0, w)   # window now [2, 0] -> 2 >= release? no: v=2>0
+    _tick(e, f, 10.0, w)  # window [0, 0] -> release
+    assert e.events[-1].phase == "release" and e.events[-1].t == 10.0
+
+
+def test_slo_burn_ratio():
+    f = _StubFleet(_site())
+    e = _engine(f, AlertSpec("slo-burn", engage=0.10, release=0.0,
+                             window_s=4.0))
+    w = [10.0] * 4
+    f.n_processed = 100
+    _tick(e, f, 2.0, w)           # offered 100, shed 0
+    assert e.events == []
+    f.n_processed, f.n_shed = 200, {"high": 30, "low": 0}
+    _tick(e, f, 4.0, w)           # window: shed 30 / offered 200 = 0.15
+    assert [(a.phase, a.t) for a in e.events] == [("engage", 4.0)]
+    assert e.events[0].value == pytest.approx(0.15)
+
+
+def test_conservation_violation_watchdog():
+    h = _site()
+    f = _StubFleet(h)
+    e = _engine(f, AlertSpec("conservation-violation", engage=1.0,
+                             release=0.5))
+    leaf = h.node_budget_w[:h.n_leaves]
+    good = h.node_budget_w[h.n_leaves:]
+    _tick(e, f, 2.0, [10.0] * 4)
+    assert e.events == []  # planner-shaped budgets conserve exactly
+    bad = good.copy()
+    bad[0] -= 50.0  # pdu0 no longer the sum of its rows
+    e.on_tick(4.0, f, np.full(4, 10.0), leaf, bad)
+    assert [(a.phase, a.t) for a in e.events] == [("engage", 4.0)]
+    assert e.events[0].value == pytest.approx(50.0)
+
+
+def test_fault_active_ground_truth():
+    f = _StubFleet(_site())
+    e = _engine(f, AlertSpec("fault-active", engage=0.5, release=0.5))
+    w = [10.0] * 4
+    _tick(e, f, 2.0, w)
+    assert e.events == []
+    f.row_alive[2] = False
+    f.chaos = _StubChaos(1)
+    _tick(e, f, 4.0, w)
+    assert e.events[0].phase == "engage"
+    assert e.events[0].value == 2.0  # fenced row + active derate
+    f.row_alive[2] = True
+    f.chaos = None
+    _tick(e, f, 6.0, w)
+    assert e.events[-1].phase == "release"
+
+
+def test_projected_rule_leads_instantaneous():
+    f = _StubFleet(_site())
+    e = _engine(f, AlertSpec("cap-proximity", engage=0.9, release=0.5,
+                             projected=True))
+    # root ramping at 0.005/s: projection (40 s ahead) crosses 0.9 while
+    # the instantaneous fraction is still ~0.2 below it
+    t, frac = 0.0, 0.4
+    while frac < 0.72:
+        t += TICK
+        frac += 0.005 * TICK
+        per_row = frac * 400.0 / 4.0
+        _tick(e, f, t, [per_row] * 4)
+    assert [a.phase for a in e.events] == ["engage"]
+    assert float(e.stream.node_frac[-1]) < 0.9  # fired ahead of the cap
+
+
+def test_engine_mirrors_transitions_into_recorder():
+    f = _StubFleet(_site())
+    rec = MetricsRecorder()
+    with recording(rec):
+        e = _engine(f, AlertSpec("cap-proximity", target="pdu0", engage=0.9,
+                                 release=0.8))
+        _tick(e, f, 2.0, [95.0, 95.0, 0.0, 0.0])
+        _tick(e, f, 4.0, [10.0, 10.0, 0.0, 0.0])
+    evs = rec.snapshot().events_of("alert")
+    assert [ev.kind for ev in evs] == ["alert_engage", "alert_release"]
+    lab = evs[0].labels_dict()
+    assert lab["alert"] == "cap-proximity:pdu0"
+    assert lab["rule"] == "cap-proximity"
+    assert lab["target"] == "pdu0"
+    assert float(lab["value"]) == pytest.approx(0.95)
+    rel = evs[1].labels_dict()
+    assert float(rel["engaged_s"]) == pytest.approx(2.0)
+    assert rec.snapshot().counter_total("alert_transitions_total") == 2.0
+
+
+# ------------------------------------------------------- zero perturbation
+
+def test_alerts_do_not_perturb_the_fleet():
+    """The tier-1 contract: an engine emitting real transitions leaves the
+    simulation bit-identical to an alerts-off run."""
+    from repro.experiments import get_scenario, run_experiment
+    sc = get_scenario("chaos-noop").with_(duration_s=1800.0,
+                                          compare_to_reference=False)
+    # a hair-trigger rule so the engine engages immediately and stays busy
+    noisy = sc.with_alerts([
+        AlertSpec("cap-proximity", engage=0.01, release=0.0),
+        AlertSpec("brake-storm", engage=1.0, release=0.0, window_s=60.0),
+    ])
+    on = run_experiment(noisy)
+    off = run_experiment(sc.with_alerts(None))
+    assert on.fleet.n_alert_events > 0
+    assert off.fleet.alert_events == []
+    assert on.result.latencies == off.result.latencies
+    assert on.fleet.decisions == off.fleet.decisions
+    assert np.array_equal(on.fleet.cluster_power_frac,
+                          off.fleet.cluster_power_frac)
+    assert np.array_equal(on.fleet.node_budget_w, off.fleet.node_budget_w)
+    assert on.fleet.n_shed == off.fleet.n_shed
+    eng = on.fleet.alerts_of(phase="engage")
+    assert eng and all(a.phase == "engage" for a in eng)

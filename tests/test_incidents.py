@@ -1,0 +1,236 @@
+"""Incident reconstruction from synthetic event traces
+(repro.obs.incidents + the tools/incidents.py CLI)."""
+
+import json
+import os
+import sys
+
+import pytest
+
+from repro.obs.incidents import (
+    INCIDENTS_NAME,
+    incidents_json,
+    reconstruct_incidents,
+    render_incidents_markdown,
+)
+from repro.obs.metrics import Event, label_key
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+
+def _ev(t, subsystem, kind, **labels):
+    return Event(float(t), subsystem, kind, label_key(labels))
+
+
+def _fault(t_apply, fault, target, *, t_sched=None, phase="fault_apply"):
+    return _ev(t_apply, "chaos", phase, fault=fault, target=target,
+               t_sched=t_sched if t_sched is not None else t_apply)
+
+
+def _engage(t, name, rule, target="", value=1.0):
+    return _ev(t, "alert", "alert_engage", alert=name, rule=rule,
+               target=target, value=value)
+
+
+def _release(t, name):
+    return _ev(t, "alert", "alert_release", alert=name)
+
+
+# ------------------------------------------------------------ basic shapes
+
+def test_empty_trace_yields_empty_report():
+    rep = reconstruct_incidents([])
+    assert rep.n_incidents == 0 and rep.n_false_alarms == 0
+    assert rep.n_events == 0
+    doc = incidents_json(rep)
+    assert doc["incidents"] == [] and doc["false_alarms"] == []
+    md = render_incidents_markdown(rep)
+    assert "0 incident(s)" in md
+
+
+def test_single_fault_full_timeline():
+    trace = [
+        _fault(120.0, "node-derate", "row3", t_sched=100.0),  # ramped
+        _engage(110.0, "cap-proximity:pdu0", "cap-proximity", "pdu0", 0.97),
+        _ev(130.0, "row", "brake_engage", row="row3"),
+        _ev(140.0, "controller", "rebalance", n_moves=2),
+        _ev(150.0, "row", "brake_release", row="row3"),
+        _fault(400.0, "node-derate", "row3", phase="fault_restore"),
+        _release(410.0, "cap-proximity:pdu0"),
+    ]
+    rep = reconstruct_incidents(trace)
+    assert rep.n_incidents == 1 and rep.n_false_alarms == 0
+    inc = rep.incidents[0]
+    assert (inc.kind, inc.target) == ("node-derate", "row3")
+    assert (inc.t_sched, inc.t_apply, inc.t_restore) == (100.0, 120.0, 400.0)
+    # detection measured against the schedule: the ramp was caught before
+    # its apply record landed
+    assert inc.detection_latency_s() == 10.0
+    assert inc.detection_after_apply_s() == -10.0
+    assert inc.detection_latency_ticks(2.0) == 5.0
+    assert inc.time_to_mitigation_s() == 40.0
+    assert inc.time_to_clear_s() == 10.0
+    assert inc.n_brake_edges == 2 and inc.n_rebalances == 1
+    assert not inc.unresolved
+    a = inc.alerts[0]
+    assert (a.name, a.t_engage, a.t_release) == ("cap-proximity:pdu0",
+                                                 110.0, 410.0)
+    assert a.value == pytest.approx(0.97)
+
+
+def test_overlapping_faults_share_alerts():
+    trace = [
+        _fault(100.0, "node-derate", "row0"),
+        _fault(150.0, "site-demand-response", "site"),
+        _engage(160.0, "cap-proximity:pdu0", "cap-proximity", "pdu0"),
+        _fault(200.0, "node-derate", "row0", phase="fault_restore"),
+        _engage(250.0, "slo-burn", "slo-burn"),  # only the DR still open
+        _fault(300.0, "site-demand-response", "site",
+               phase="fault_restore"),
+        _release(310.0, "cap-proximity:pdu0"),
+        _release(320.0, "slo-burn"),
+    ]
+    rep = reconstruct_incidents(trace)
+    assert rep.n_incidents == 2 and rep.n_false_alarms == 0
+    derate, dr = rep.incidents
+    # the 160 s engage falls inside both windows: attributed to both
+    assert [a.name for a in derate.alerts] == ["cap-proximity:pdu0"]
+    assert [a.name for a in dr.alerts] == ["cap-proximity:pdu0", "slo-burn"]
+    # one release resolves every attributed copy of the alert
+    assert all(a.t_release == 310.0 for a in derate.alerts)
+    assert dr.alerts[1].t_release == 320.0
+    assert not derate.unresolved and not dr.unresolved
+
+
+def test_never_releasing_alert_keeps_incident_open():
+    trace = [
+        _fault(100.0, "node-derate", "row1"),
+        _engage(110.0, "brake-storm", "brake-storm"),
+        _fault(200.0, "node-derate", "row1", phase="fault_restore"),
+        # no release before the trace ends
+    ]
+    rep = reconstruct_incidents(trace)
+    inc = rep.incidents[0]
+    assert inc.t_restore == 200.0
+    assert inc.alerts[0].t_release is None
+    assert inc.unresolved
+    assert inc.time_to_clear_s() is None
+    assert "(open)" in render_incidents_markdown(rep)
+
+
+def test_unrestored_fault_is_unresolved_and_absorbs_late_engages():
+    trace = [
+        _fault(100.0, "row-crash", "row2"),
+        _engage(99999.0, "fault-active", "fault-active"),  # open-ended window
+    ]
+    rep = reconstruct_incidents(trace)
+    inc = rep.incidents[0]
+    assert inc.t_restore is None and inc.unresolved
+    assert inc.time_to_clear_s() is None
+    assert [a.name for a in inc.alerts] == ["fault-active"]
+    assert rep.n_false_alarms == 0
+
+
+def test_row_crash_closed_by_row_revive():
+    trace = [
+        _fault(100.0, "row-crash", "row2"),
+        _fault(500.0, "row-revive", "row2"),  # revive *apply* closes it
+    ]
+    rep = reconstruct_incidents(trace)
+    assert rep.n_incidents == 1  # the revive is a closer, not an incident
+    inc = rep.incidents[0]
+    assert inc.kind == "row-crash" and inc.t_restore == 500.0
+    assert not inc.unresolved
+
+
+def test_out_of_order_jsonl_is_stably_resorted():
+    trace = [
+        _fault(120.0, "node-derate", "row3", t_sched=100.0),
+        _engage(110.0, "cap-proximity:pdu0", "cap-proximity", "pdu0", 0.97),
+        _ev(140.0, "controller", "rebalance"),
+        _fault(400.0, "node-derate", "row3", phase="fault_restore"),
+        _release(410.0, "cap-proximity:pdu0"),
+    ]
+    shuffled = [trace[i] for i in (4, 1, 3, 0, 2)]
+    a = incidents_json(reconstruct_incidents(trace))
+    b = incidents_json(reconstruct_incidents(shuffled))
+    assert a == b
+    assert a["incidents"][0]["detection_latency_s"] == 10.0
+
+
+def test_engage_outside_any_window_is_a_false_alarm():
+    trace = [
+        _fault(100.0, "node-derate", "row0"),
+        _fault(200.0, "node-derate", "row0", phase="fault_restore"),
+        _engage(250.0, "cap-proximity:pdu0", "cap-proximity", "pdu0", 1.01),
+    ]
+    rep = reconstruct_incidents(trace)
+    assert rep.n_false_alarms == 1
+    assert rep.incidents[0].alerts == []
+    doc = incidents_json(rep)
+    assert doc["false_alarms"][0]["t"] == 250.0
+    assert doc["false_alarms"][0]["alert"] == "cap-proximity:pdu0"
+    assert "false alarms" in render_incidents_markdown(rep)
+
+
+def test_fault_active_is_ground_truth_not_detection():
+    trace = [
+        _fault(100.0, "node-derate", "row0"),
+        _engage(102.0, "fault-active", "fault-active"),
+        _engage(130.0, "cap-proximity:pdu0", "cap-proximity", "pdu0"),
+        _fault(300.0, "node-derate", "row0", phase="fault_restore"),
+    ]
+    inc = reconstruct_incidents(trace).incidents[0]
+    det = inc.first_detection()
+    assert det.name == "cap-proximity:pdu0"  # telemetry rule wins
+    assert inc.detection_latency_s() == 30.0
+    # with only the ground-truth alert, it is the fallback detection
+    inc2 = reconstruct_incidents(trace[:2] + trace[3:]).incidents[0]
+    assert inc2.first_detection().name == "fault-active"
+
+
+def test_time_to_clear_floors_at_zero():
+    trace = [
+        _fault(100.0, "node-derate", "row0"),
+        _engage(110.0, "slo-burn", "slo-burn"),
+        _release(150.0, "slo-burn"),  # cleared *during* the fault
+        _fault(300.0, "node-derate", "row0", phase="fault_restore"),
+    ]
+    inc = reconstruct_incidents(trace).incidents[0]
+    assert inc.time_to_clear_s() == 0.0
+
+
+# ----------------------------------------------------------------- the CLI
+
+def test_incidents_cli_round_trip(tmp_path):
+    import incidents as cli
+    lines = [
+        {"ts": 120.0, "subsystem": "chaos", "kind": "fault_apply",
+         "labels": {"fault": "node-derate", "target": "row3",
+                    "t_sched": "100.0"}},
+        {"ts": 130.0, "subsystem": "alert", "kind": "alert_engage",
+         "labels": {"alert": "cap-proximity:pdu0", "rule": "cap-proximity",
+                    "target": "pdu0", "value": "0.97"}},
+        {"ts": 400.0, "subsystem": "chaos", "kind": "fault_restore",
+         "labels": {"fault": "node-derate", "target": "row3",
+                    "t_sched": "400.0"}},
+        {"ts": 410.0, "subsystem": "alert", "kind": "alert_release",
+         "labels": {"alert": "cap-proximity:pdu0"}},
+    ]
+    with open(tmp_path / "events.jsonl", "w") as f:
+        for rec in lines:
+            f.write(json.dumps(rec) + "\n")
+    (tmp_path / "manifest.json").write_text(json.dumps(
+        {"scenario": {"telemetry": {"telemetry_s": 2.0}}}))
+    doc, rep, tick_s = cli.build_incidents(str(tmp_path))
+    assert tick_s == 2.0
+    assert doc["n_incidents"] == 1 and doc["n_false_alarms"] == 0
+    assert doc["incidents"][0]["detection_latency_s"] == 30.0
+    assert doc["incidents"][0]["detection_latency_ticks"] == 15.0
+    on_disk = json.loads((tmp_path / INCIDENTS_NAME).read_text())
+    assert on_disk == doc
+
+
+def test_incidents_cli_missing_trace(tmp_path):
+    import incidents as cli
+    assert cli.main([str(tmp_path)]) == 1

@@ -249,9 +249,26 @@ def test_snapshot_merge_accumulates():
     s = r1.snapshot()
     s.merge(r2.snapshot())
     assert s.counter_total("c") == 3.0
-    assert s.gauges[("g", ())] == 5.0  # last write wins
+    assert s.gauges[("g", ())] == 5.0  # per-key max wins
     assert s.hists[("h", ())].count == 2
     assert [e.kind for e in s.events] == ["e1", "e2"]
+
+
+def test_snapshot_merge_gauges_order_independent():
+    """Gauge merge is max-per-key: merging worker snapshots in either
+    order yields the same gauges (last-write-wins depended on worker
+    scheduling)."""
+    r1, r2 = MetricsRecorder(), MetricsRecorder()
+    r1.gauge("peak", 3.0)
+    r1.gauge("only_a", 1.0)
+    r2.gauge("peak", 2.0)
+    r2.gauge("only_b", 4.0)
+    ab = r1.snapshot().merge(r2.snapshot())
+    ba = r2.snapshot().merge(r1.snapshot())
+    assert ab.gauges == ba.gauges
+    assert ab.gauges[("peak", ())] == 3.0
+    assert ab.gauges[("only_a", ())] == 1.0
+    assert ab.gauges[("only_b", ())] == 4.0
 
 
 def test_fast_path_label_keys_match_kwargs_path():

@@ -1,0 +1,203 @@
+"""Streaming window aggregation: P² quantiles, EWMA slope, tumbling and
+sliding windows, and the FleetStream composite (repro.obs.stream)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs.stream import (
+    OOB_HORIZON_S,
+    EwmaSlope,
+    FleetStream,
+    P2Quantile,
+    SlidingCounter,
+    TumblingWindow,
+)
+
+
+# ------------------------------------------------------------- P2Quantile
+
+def test_p2_exact_for_first_five():
+    d = P2Quantile(0.5)
+    for x in (5.0, 1.0, 3.0, 2.0, 4.0):
+        d.observe(x)
+    assert d.value() == 3.0  # exact median of {1..5}
+
+
+def test_p2_nan_before_any_observation():
+    assert math.isnan(P2Quantile(0.9).value())
+
+
+def test_p2_rejects_degenerate_quantile():
+    with pytest.raises(ValueError):
+        P2Quantile(0.0)
+    with pytest.raises(ValueError):
+        P2Quantile(1.0)
+
+
+@pytest.mark.parametrize("q", [0.5, 0.9, 0.99])
+def test_p2_tracks_numpy_percentile(q):
+    rng = np.random.default_rng(7)
+    xs = rng.normal(10.0, 3.0, size=5000)
+    d = P2Quantile(q)
+    for x in xs:
+        d.observe(float(x))
+    want = float(np.percentile(xs, 100.0 * q))
+    # P² is an estimator: a few percent of the spread is the contract
+    assert abs(d.value() - want) < 0.15 * xs.std()
+
+
+def test_p2_deterministic():
+    xs = [math.sin(i * 0.7) * 5.0 + i * 0.01 for i in range(500)]
+    d1, d2 = P2Quantile(0.9), P2Quantile(0.9)
+    for x in xs:
+        d1.observe(x)
+        d2.observe(x)
+    assert d1.value() == d2.value()
+
+
+# -------------------------------------------------------------- EwmaSlope
+
+def test_ewma_constant_series_projects_flat():
+    e = EwmaSlope()
+    for i in range(50):
+        e.observe(2.0 * i, 0.8)
+    assert e.projected() == pytest.approx(0.8, abs=1e-9)
+    assert e.slope == pytest.approx(0.0, abs=1e-9)
+
+
+def test_ewma_ramp_projects_ahead():
+    e = EwmaSlope(horizon_s=40.0)
+    slope = 0.001  # frac per second
+    for i in range(200):
+        e.observe(2.0 * i, 0.5 + slope * 2.0 * i)
+    # projection looks one OOB horizon past the level
+    assert e.projected() > e.level
+    assert e.projected() == pytest.approx(e.level + e.slope * 40.0)
+    assert e.slope == pytest.approx(slope, rel=0.15)
+
+
+def test_ewma_duplicate_tick_ignored():
+    e = EwmaSlope()
+    e.observe(0.0, 1.0)
+    e.observe(2.0, 2.0)
+    level, slope = e.level, e.slope
+    e.observe(2.0, 99.0)  # dt == 0: dropped
+    assert (e.level, e.slope) == (level, slope)
+
+
+def test_ewma_nan_before_first_observation():
+    assert math.isnan(EwmaSlope().projected())
+
+
+def test_ewma_rejects_bad_smoothing():
+    with pytest.raises(ValueError):
+        EwmaSlope(alpha=0.0)
+    with pytest.raises(ValueError):
+        EwmaSlope(beta=1.5)
+
+
+# --------------------------------------------------------- TumblingWindow
+
+def test_tumbling_window_closes_on_boundary():
+    w = TumblingWindow(60.0, quantiles=(0.5,))
+    assert w.observe(0.0, 1.0) is None
+    assert w.observe(30.0, 3.0) is None
+    closed = w.observe(60.0, 100.0)  # lands in the next window
+    assert closed is not None and closed is w.last
+    assert closed.t_start == 0.0 and closed.t_end == 60.0
+    assert closed.count == 2
+    assert closed.mean == 2.0
+    assert (closed.minimum, closed.maximum) == (1.0, 3.0)
+    assert closed.quantile(0.5) == pytest.approx(1.0)  # exact phase, n=2
+    assert w.live_count == 1  # the 100.0 observation
+
+
+def test_window_stats_unknown_quantile_raises():
+    w = TumblingWindow(10.0, quantiles=(0.5,))
+    w.observe(0.0, 1.0)
+    closed = w.observe(10.0, 2.0)
+    with pytest.raises(KeyError):
+        closed.quantile(0.99)
+
+
+def test_tumbling_window_rejects_bad_width():
+    with pytest.raises(ValueError):
+        TumblingWindow(0.0)
+
+
+# --------------------------------------------------------- SlidingCounter
+
+def test_sliding_counter_rolls_off():
+    c = SlidingCounter(width_s=6.0, tick_s=2.0)  # 3 slots
+    assert not c.filled
+    for x in (1.0, 2.0, 3.0):
+        c.push(x)
+    assert c.filled and c.total == 6.0
+    c.push(10.0)  # evicts the 1.0
+    assert c.total == 15.0
+
+
+def test_sliding_counter_rejects_bad_sizes():
+    with pytest.raises(ValueError):
+        SlidingCounter(0.0, 2.0)
+    with pytest.raises(ValueError):
+        SlidingCounter(60.0, 0.0)
+
+
+# ------------------------------------------------------------ FleetStream
+
+def _feed(st, t, fracs, braked, shed=0, offered=0):
+    st.observe(t, np.asarray(fracs, dtype=float),
+               np.asarray(braked, dtype=bool),
+               shed_total=shed, offered_total=offered)
+
+
+def test_fleet_stream_brake_edges_and_deltas():
+    st = FleetStream(tick_s=2.0)
+    edges = st.sliding("brake_edges", 6.0)
+    shed = st.sliding("shed", 6.0)
+    _feed(st, 2.0, [0.5, 0.6, 0.55], [False, True], shed=0, offered=10)
+    assert st.brake_edges_tick == 1  # first tick: braked rows count as edges
+    _feed(st, 4.0, [0.5, 0.6, 0.55], [True, False], shed=3, offered=20)
+    assert st.brake_edges_tick == 2  # both rows flipped
+    assert st.shed_tick == 3 and st.offered_tick == 10
+    assert edges.total == 3.0
+    assert shed.total == 3.0
+
+
+def test_fleet_stream_tracks_all_nodes_by_default():
+    st = FleetStream(tick_s=2.0)
+    _feed(st, 2.0, [0.1, 0.2, 0.3], [False])
+    assert sorted(st.node_windows) == [0, 1, 2]
+
+
+def test_fleet_stream_window_nodes_opt_out():
+    st = FleetStream(tick_s=2.0, window_nodes=())
+    _feed(st, 2.0, [0.1, 0.2, 0.3], [False])
+    assert st.node_windows == {}
+    # instantaneous state still live
+    assert st.node_frac[-1] == 0.3
+
+
+def test_fleet_stream_window_nodes_negative_index():
+    st = FleetStream(tick_s=2.0, window_nodes=(-1,))
+    _feed(st, 2.0, [0.1, 0.2, 0.9], [False])
+    assert sorted(st.node_windows) == [2]
+    assert st.node_windows[2].live_count == 1
+
+
+def test_fleet_stream_root_slope_projection():
+    st = FleetStream(tick_s=2.0, horizon_s=OOB_HORIZON_S)
+    assert math.isnan(st.projected_root_frac())
+    for i in range(100):
+        _feed(st, 2.0 * (i + 1), [0.0, 0.5 + 0.001 * 2.0 * i], [False])
+    # rising root fraction: the projection leads the instantaneous value
+    assert st.projected_root_frac() > float(st.node_frac[-1])
+
+
+def test_fleet_stream_unknown_channel_rejected():
+    st = FleetStream(tick_s=2.0)
+    with pytest.raises(KeyError):
+        st.sliding("nope", 60.0)

@@ -6,7 +6,7 @@ Every named scenario (``table2-*``, ``fig*``, ``cluster-*``, ``mc-*``,
 ``fleet-*``, ``fleet-rebalance-*``, ``site-*``, ``chaos-*``) is rendered
 into one scenario reference table, and every pluggable-component registry —
 policies, routers, admission controllers, rebalance policies, occupancy
-generators, chaos fault events — into a registry reference, so the docs cannot drift from the code: a tier-1
+generators, chaos fault events, alert rules — into a registry reference, so the docs cannot drift from the code: a tier-1
 test regenerates both files in memory and asserts they match what is checked
 in, and ``--check`` does the same from the command line (wired into
 ``tools/smoke.sh`` / CI).
@@ -50,8 +50,8 @@ import repro.provisioning  # registers the mc-* generator families
 outcome = run_experiment(get_scenario("fleet-rebalance-predictive"))
 ```
 
-| scenario | duration | fleet | traffic | policy | routing | controller | budget | faults |
-|---|---|---|---|---|---|---|---|---|
+| scenario | duration | fleet | traffic | policy | routing | controller | budget | faults | alerts |
+|---|---|---|---|---|---|---|---|---|---|
 """
 
 FOOTER = """
@@ -70,7 +70,10 @@ point), `nominal` (n_provisioned x server rating), or explicit watts.
 *faults* is the scenario's injected chaos timeline (`Scenario.faults`),
 one `kind@t` entry per `FaultEvent` (`none` marks an explicitly attached
 empty `FaultSpec` — the bit-parity anchor); empty means no fault engine at
-all.
+all. *alerts* is the scenario's attached alert pack (`Scenario.alerts`):
+`default (n)` for the stock `default_alert_pack()`, otherwise one entry
+per `AlertSpec` kind; empty means no alert engine (the evaluator is
+write-only either way — alerts never perturb the simulation).
 """
 
 REG_HEADER = """\
@@ -84,8 +87,8 @@ REG_HEADER = """\
 Every pluggable component is registered by name so scenarios stay
 JSON-serializable: a [`Scenario`](scenarios.md) names a policy, router,
 admission controller, rebalance policy, occupancy generator — and, for
-chaos scenarios, fault-event kinds — and the builders below construct
-fresh instances per run. The one-line summaries
+chaos scenarios, fault-event kinds and alert-rule kinds — and the
+builders below construct fresh instances per run. The one-line summaries
 are the first line of each implementation's docstring.
 """
 
@@ -101,7 +104,11 @@ latter recursing over every interior node of the scenario's
 curves traffic is sampled from (`TrafficSpec.generator`). *fault events*
 are the `FaultEvent.kind` values a `FaultSpec` timeline may carry
 (`Scenario.faults`); the `ChaosInjector` applies them between telemetry
-ticks and logs every application to `FleetResult.fault_events`.
+ticks and logs every application to `FleetResult.fault_events`. *alert
+rules* are the `AlertSpec.kind` values a scenario's alert pack may carry
+(`Scenario.alerts`); the `AlertEngine` evaluates them per telemetry tick
+and emits `alert_engage`/`alert_release` events without perturbing the
+run (`repro.obs.alerts`).
 """
 
 
@@ -172,6 +179,16 @@ def _fmt_faults(sc) -> str:
     return " ".join(f"`{e.kind}@{e.t:.0f}s`" for e in fs.events)
 
 
+def _fmt_alerts(sc) -> str:
+    from repro.obs.alerts import default_alert_pack
+    alerts = getattr(sc, "alerts", None)
+    if alerts is None:
+        return ""
+    if tuple(alerts) == default_alert_pack():
+        return f"default ({len(alerts)})"
+    return " ".join(f"`{s.kind}`" for s in alerts)
+
+
 def generate() -> str:
     """The full docs/scenarios.md contents for the current registry."""
     import repro.provisioning  # noqa: F401  (registers mc-* scenarios)
@@ -184,7 +201,7 @@ def generate() -> str:
             f"| `{name}` | {_fmt_duration(sc.duration_s)} | {_fmt_fleet(sc)} "
             f"| {_fmt_traffic(sc)} | {sc.policy.kind} | {_fmt_routing(sc)} "
             f"| {_fmt_controller(sc)} | {_fmt_budget(sc)} "
-            f"| {_fmt_faults(sc)} |")
+            f"| {_fmt_faults(sc)} | {_fmt_alerts(sc)} |")
     return HEADER + "\n".join(rows) + "\n" + FOOTER
 
 
@@ -210,6 +227,7 @@ def generate_registries() -> str:
     import repro.provisioning  # noqa: F401  (registers the mc-* generators)
     from repro.chaos import FAULT_EVENT_BUILDERS
     from repro.core.traces import get_occupancy_generator, list_occupancy_generators
+    from repro.obs.alerts import ALERT_BUILDERS
     from repro.experiments.scenario import POLICY_BUILDERS
     from repro.fleet.controller import REBALANCE_BUILDERS
     from repro.fleet.router import ADMISSION_BUILDERS, ROUTER_BUILDERS
@@ -247,6 +265,12 @@ def generate_registries() -> str:
             "Chaos-timeline event kinds the `ChaosInjector` applies to a "
             "running fleet between telemetry ticks (`repro.chaos`).",
             sorted(FAULT_EVENT_BUILDERS.items())),
+        _registry_table(
+            "Alert rules (`AlertSpec.kind`)",
+            "Streaming alert rules the `AlertEngine` evaluates per "
+            "telemetry tick, with hysteresis and engage-streak debouncing "
+            "(`repro.obs.alerts`).",
+            sorted(ALERT_BUILDERS.items())),
     ]
     return REG_HEADER + "\n" + "\n".join(sections) + REG_FOOTER
 

@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Reconstruct incident timelines from an artifacts directory.
+
+  PYTHONPATH=src python tools/incidents.py out/            # print + write
+  PYTHONPATH=src python tools/incidents.py out/ --no-write # print only
+
+Reads ``events.jsonl`` (the trace ``--artifacts`` runs export), folds it
+into causal incident timelines with :func:`repro.obs.reconstruct_incidents`
+— fault windows, the alerts they triggered, detection latency against the
+ground-truth schedule, time-to-mitigation and time-to-clear — then prints
+the markdown section and writes the machine-readable ``incidents.json``
+next to the trace. ``tools/report.py`` inlines the same section into
+``report.md`` when that file is present.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.export import EVENTS_NAME, read_events, read_manifest  # noqa: E402
+from repro.obs.incidents import (  # noqa: E402
+    INCIDENTS_NAME,
+    incidents_json,
+    reconstruct_incidents,
+    render_incidents_markdown,
+)
+
+
+def build_incidents(d: str, *, write: bool = True) -> dict:
+    """Reconstruct from ``d``/events.jsonl; optionally write incidents.json.
+    Returns ``(machine-readable dict, IncidentReport, tick_s)``."""
+    events_path = os.path.join(d, EVENTS_NAME)
+    if not os.path.exists(events_path):
+        raise FileNotFoundError(
+            f"{events_path} not found — run a benchmark with --artifacts")
+    events = read_events(events_path)
+    tick_s = 2.0
+    try:
+        m = read_manifest(d)
+        sc = m.get("scenario") or {}
+        if isinstance(sc, dict):
+            tick_s = float((sc.get("telemetry") or {})
+                           .get("telemetry_s", tick_s) or tick_s)
+    except (OSError, ValueError):
+        pass
+    report = reconstruct_incidents(events)
+    doc = incidents_json(report, tick_s=tick_s)
+    if write:
+        with open(os.path.join(d, INCIDENTS_NAME), "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return doc, report, tick_s
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    write = "--no-write" not in argv
+    argv = [a for a in argv if a != "--no-write"]
+    if len(argv) != 1:
+        print(__doc__)
+        return 2
+    try:
+        _, report, tick_s = build_incidents(argv[0], write=write)
+    except FileNotFoundError as exc:
+        print(str(exc), file=sys.stderr)
+        return 1
+    print(render_incidents_markdown(report, tick_s=tick_s), end="")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,13 +3,19 @@
 
   PYTHONPATH=src python tools/report.py out/          # one-run report
   PYTHONPATH=src python tools/report.py old/ new/     # perf-trajectory diff
+  PYTHONPATH=src python tools/report.py --json ...    # machine-readable
 
 A report covers the run manifest, the PASS/FAIL table folded from every
 ``BENCH_<module>.json``, a span "flame" summary (the wall-clock stage
-profile from ``metrics.prom``), and the top event counts from
-``events.jsonl``. The diff mode compares two artifact dirs row by row:
-validation regressions (PASS -> FAIL) and per-row timing deltas — the
-artifact pipeline's answer to "what did this PR do to the benchmarks".
+profile from ``metrics.prom``), the top event counts from ``events.jsonl``,
+and — when ``tools/incidents.py`` has left an ``incidents.json`` behind —
+the reconstructed incident timelines. The diff mode compares two artifact
+dirs row by row: validation regressions (PASS -> FAIL) and per-row timing
+deltas — the artifact pipeline's answer to "what did this PR do to the
+benchmarks". With ``--json`` the same facts come out as one JSON document
+on stdout (CI-parseable); in diff mode the exit code is 1 when any row
+regressed PASS -> FAIL, so pipelines fail loudly instead of paging through
+markdown.
 """
 
 from __future__ import annotations
@@ -29,6 +35,7 @@ from repro.obs.export import (  # noqa: E402
     read_manifest,
     read_prometheus,
 )
+from repro.obs.incidents import INCIDENTS_NAME  # noqa: E402
 
 
 def _load_bench(d: str) -> dict:
@@ -130,33 +137,69 @@ def render_report(d: str) -> str:
                 lines.append(f"| {sub} | {kind} | {n} |")
             lines.append(f"\n{sum(counts.values())} events total.")
             lines.append("")
+
+    # -- incident timelines (when tools/incidents.py has run) ----------------
+    incidents_path = os.path.join(d, INCIDENTS_NAME)
+    if os.path.exists(incidents_path) and os.path.exists(events_path):
+        from repro.obs.incidents import (
+            reconstruct_incidents, render_incidents_markdown)
+        with open(incidents_path) as f:
+            tick_s = float(json.load(f).get("tick_s", 2.0))
+        report = reconstruct_incidents(read_events(events_path))
+        lines += [render_incidents_markdown(report, tick_s=tick_s)]
     return "\n".join(lines)
 
 
-def render_diff(old: str, new: str) -> str:
-    """Row-by-row comparison of two artifact dirs."""
+def diff_data(old: str, new: str) -> dict:
+    """Row-by-row comparison of two artifact dirs as plain data:
+    ``regressions`` (ok went PASS/- -> FAIL), ``fixes`` (the reverse),
+    ``timing`` deltas, and ``lopsided`` rows present on one side only."""
     a, b = _load_bench(old), _load_bench(new)
-    lines = [f"# Benchmark diff — `{old}` -> `{new}`", ""]
-    regressions, fixes, timing = [], [], []
+    regressions, fixes, timing, lopsided = [], [], [], []
     for module in sorted(set(a) | set(b)):
         ra, rb = a.get(module), b.get(module)
         if ra is None or rb is None:
-            lines.append(f"- `{module}`: only in "
-                         f"`{old if module in a else new}` (or raised)")
+            lopsided.append({"module": module, "row": None,
+                             "side": "old" if module in a else "new"})
             continue
         for name in sorted(set(ra) | set(rb)):
             va, vb = ra.get(name), rb.get(name)
             if va is None or vb is None:
-                lines.append(f"- `{module}` / `{name}`: "
-                             f"{'removed' if vb is None else 'added'}")
+                lopsided.append({"module": module, "row": name,
+                                 "side": "old" if vb is None else "new"})
                 continue
             if va["ok"] != vb["ok"]:
-                (regressions if vb["ok"] is False else fixes).append(
-                    (module, name, _flag(va["ok"]), _flag(vb["ok"]),
-                     vb["derived"]))
+                rec = {"module": module, "row": name,
+                       "old": _flag(va["ok"]), "new": _flag(vb["ok"]),
+                       "derived": vb["derived"]}
+                (regressions if vb["ok"] is False else fixes).append(rec)
             ua, ub = va["us_per_call"], vb["us_per_call"]
             if ua > 0 and ub > 0:
-                timing.append((ub / ua - 1.0, module, name, ua, ub))
+                timing.append({"module": module, "row": name,
+                               "old_us": ua, "new_us": ub,
+                               "delta": ub / ua - 1.0})
+    return {"old": old, "new": new, "regressions": regressions,
+            "fixes": fixes, "timing": timing, "lopsided": lopsided}
+
+
+def render_diff(old: str, new: str, data: dict = None) -> str:
+    """Row-by-row comparison of two artifact dirs."""
+    d = data if data is not None else diff_data(old, new)
+    lines = [f"# Benchmark diff — `{old}` -> `{new}`", ""]
+    for rec in d["lopsided"]:
+        if rec["row"] is None:
+            lines.append(f"- `{rec['module']}`: only in "
+                         f"`{old if rec['side'] == 'old' else new}` "
+                         f"(or raised)")
+        else:
+            lines.append(f"- `{rec['module']}` / `{rec['row']}`: "
+                         f"{'removed' if rec['side'] == 'old' else 'added'}")
+    regressions = [(r["module"], r["row"], r["old"], r["new"], r["derived"])
+                   for r in d["regressions"]]
+    fixes = [(r["module"], r["row"], r["old"], r["new"], r["derived"])
+             for r in d["fixes"]]
+    timing = [(r["delta"], r["module"], r["row"], r["old_us"], r["new_us"])
+              for r in d["timing"]]
     if regressions:
         lines += ["## Regressions", ""]
         lines += [f"- `{m}` / `{n}`: {fa} -> {fb} — {d}"
@@ -180,14 +223,51 @@ def render_diff(old: str, new: str) -> str:
     return "\n".join(lines)
 
 
+def report_json(d: str) -> dict:
+    """The one-run report as plain data (``--json`` single-dir mode)."""
+    out = {"dir": d}
+    manifest_path = os.path.join(d, MANIFEST_NAME)
+    if os.path.exists(manifest_path):
+        out["manifest"] = read_manifest(d)
+    modules = {}
+    for module, rows in _load_bench(d).items():
+        if rows is None:
+            modules[module] = {"error": True}
+            continue
+        modules[module] = {
+            "rows": len(rows),
+            "pass": sum(1 for r in rows.values() if r["ok"] is True),
+            "fail": sum(1 for r in rows.values() if r["ok"] is False),
+            "failing": sorted(n for n, r in rows.items()
+                              if r["ok"] is False),
+        }
+    out["benchmarks"] = modules
+    incidents_path = os.path.join(d, INCIDENTS_NAME)
+    if os.path.exists(incidents_path):
+        with open(incidents_path) as f:
+            out["incidents"] = json.load(f)
+    return out
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
+    as_json = "--json" in argv
+    argv = [a for a in argv if a != "--json"]
     if len(argv) == 1:
-        print(render_report(argv[0]))
+        if as_json:
+            print(json.dumps(report_json(argv[0]), indent=2, sort_keys=True,
+                             default=str))
+        else:
+            print(render_report(argv[0]))
         return 0
     if len(argv) == 2:
-        print(render_diff(argv[0], argv[1]))
-        return 0
+        data = diff_data(argv[0], argv[1])
+        if as_json:
+            print(json.dumps(data, indent=2, sort_keys=True))
+        else:
+            print(render_diff(argv[0], argv[1], data))
+        # a PASS -> FAIL regression is a pipeline failure, not just prose
+        return 1 if data["regressions"] else 0
     print(__doc__)
     return 2
 

@@ -32,10 +32,14 @@ python -m benchmarks.run --quick --only chaos_resilience
 echo "== observability quick benchmark =="
 python -m benchmarks.run --quick --only observability
 
-echo "== artifact pipeline (instrumented run -> manifest/metrics/events/report) =="
+echo "== alerting quick benchmark =="
+python -m benchmarks.run --quick --only alerting
+
+echo "== artifact pipeline (instrumented run -> manifest/metrics/events/incidents/report) =="
 ARTIFACTS_DIR="${ARTIFACTS_DIR:-out/smoke-artifacts}"
 rm -rf "$ARTIFACTS_DIR"
-python -m benchmarks.run --quick --only table2 --artifacts "$ARTIFACTS_DIR"
+python -m benchmarks.run --quick --only table2,alerting --artifacts "$ARTIFACTS_DIR"
+python tools/incidents.py "$ARTIFACTS_DIR" > /dev/null
 python - "$ARTIFACTS_DIR" <<'EOF'
 import json, os, sys
 d = sys.argv[1]
@@ -49,6 +53,10 @@ assert bench, f"no BENCH_*.json under {d}"
 for p in bench:
     with open(os.path.join(d, p)) as f:
         assert json.load(f)["rows"] is not None, f"{p}: module raised"
+with open(os.path.join(d, "incidents.json")) as f:
+    inc = json.load(f)
+assert inc["n_incidents"] >= 1, inc  # the alerting module injects real faults
+assert inc["n_false_alarms"] == 0, inc
 print(f"artifacts OK: {sorted(os.listdir(d))}")
 EOF
 python tools/report.py "$ARTIFACTS_DIR" > "$ARTIFACTS_DIR/report.md"

@@ -47,6 +47,7 @@ MODULES = [
     "benchmarks.roofline_table",
     "benchmarks.observability",
     "benchmarks.alerting",
+    "benchmarks.batched_engine",
 ]
 
 

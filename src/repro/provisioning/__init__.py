@@ -6,6 +6,13 @@ Importing this package registers the scenario-family trace generators
 ``mc-*`` scenarios alongside the figure scenarios.
 """
 
+from repro.provisioning.batched import (
+    BatchedRun,
+    TickModel,
+    lower_ensemble,
+    run_batched_ensemble,
+    run_tick_model,
+)
 from repro.provisioning.ensembles import (
     GENERATOR_FAMILY,
     MC_BASE_NAME,
@@ -33,6 +40,7 @@ from repro.provisioning.planner import (
 )
 
 __all__ = [
+    "BatchedRun",
     "EnsembleResult",
     "EnsembleSpec",
     "GENERATOR_FAMILY",
@@ -43,12 +51,15 @@ __all__ = [
     "PlanResult",
     "RiskConstraints",
     "SiteTrace",
+    "TickModel",
     "compose_rows",
     "compose_site",
+    "lower_ensemble",
     "plan_capacity",
     "plan_controller_comparison",
     "plan_scenarios",
     "resolve_ensemble_budget",
+    "run_batched_ensemble",
     "run_ensemble",
     "run_ensemble_grid",
     "run_ensemble_sequential",

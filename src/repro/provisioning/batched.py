@@ -1,0 +1,842 @@
+"""JAX-native batched ensemble engine with a numpy differential oracle.
+
+The Monte-Carlo engine in ``provisioning.montecarlo`` parallelizes the
+event-driven :class:`~repro.core.simulator.RowSimulator` across a fork pool —
+throughput is capped by host cores (< 2 effective in CI), so risk tails stay
+at tens of members. This module rebuilds the hot loop as a *tick-level fluid
+model* that runs N ensemble members x T telemetry ticks as one batched device
+program (DESIGN.md §15):
+
+* **Lowering** — :func:`lower_ensemble` compiles a
+  :class:`~repro.experiments.scenario.Scenario` + member seeds into a
+  :class:`TickModel`: per-member occupancy on the 60 s trace grid, closed-form
+  power coefficients from the Table-4 workload mix (idle + per-priority
+  busy-power terms with the DVFS ``f^gamma`` law from
+  ``core.power_model``), the POLCA thresholds/frequencies, fault timelines
+  lowered to per-tick budget scales and row-alive masks, and the
+  ``PowerHierarchy`` node matrix for segment-sum folds.
+
+* **Two backends, one contract** — ``engine="jax"`` runs the tick advance as
+  a ``lax.scan`` over time ``vmap``-ed over members, with the
+  :class:`~repro.core.policy.PolcaPolicy` /
+  :class:`~repro.core.policy.PredictivePolcaPolicy` observe step (windowed
+  least-squares slope over the 40 s OOB horizon) carried in scan state as a
+  vectorized boolean state machine. ``engine="numpy"`` is the differential
+  **oracle**: the identical tick/ring contract driven by the *real* policy
+  objects through :class:`~repro.core.telemetry.Telemetry`, one instance per
+  (member, row) — so the vectorized state machine is checked against the
+  genuine Algorithm-1 implementation, not a reimplementation of itself
+  (``tests/test_batched_parity.py``).
+
+* **Actuation ring** — out-of-band cap commands apply ``ceil(40/2)=20``
+  ticks after issue and powerbrakes ``ceil(5/2)=3`` ticks after, modeled as
+  a ``[rows, D, 2]`` ring buffer (NaN = no command); later-issued commands
+  overwrite earlier ones per frequency field, which is exactly the DES event
+  queue's same-due-time resolution.
+
+The oracle contract deliberately accepts two float nonidentities, both
+documented in DESIGN.md §15: XLA may fuse multiply-adds (power series agree
+to ~1e-15, asserted <= 1e-6 relative), and ``jnp.sum`` may reorder the
+predictive slope accumulation (~1e-16). Brake-tick *sets* are compared for
+bit-equality on the harness scenarios; a flip would need a power sample
+within ~1e-12 of a threshold.
+
+``montecarlo.run_ensemble(engine=...)`` dispatches here, and
+``planner.plan_capacity(engine="jax")`` uses the dense tails to activate the
+CVaR gate in ``RiskConstraints``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.policy import PolcaPolicy, PredictivePolcaPolicy
+from repro.core.simulator import SimResult
+from repro.core.slo import LatencyStats
+from repro.core.telemetry import Telemetry
+from repro.core.traces import TABLE4, get_occupancy_generator
+from repro.experiments.runner import build_workloads, row_budgets
+from repro.experiments.scenario import Scenario
+from repro.obs.metrics import get_recorder
+from repro.provisioning.montecarlo import (
+    EnsembleResult,
+    EnsembleSpec,
+    MemberStats,
+    resolve_ensemble_budget,
+)
+
+# members x ticks above which run_batched_ensemble drops per-tick series by
+# default (a [N, T] float64 matrix; 4e6 ~ 32 MB) — mirroring the
+# record_power=False path of the DES engine
+_SERIES_CELL_LIMIT = 4_000_000
+# per-member SLO-impact samples are decimated onto at most this many slots
+_IMPACT_SLOTS = 256
+_JITTER_SALT = 9173  # member-occupancy jitter stream, disjoint from arrivals
+
+
+@dataclass(frozen=True)
+class TickModel:
+    """A Scenario + member seeds lowered to the batched tick program.
+
+    Everything both backends consume: static arrays on the tick/trace grids
+    plus closed-form scalars. The model is engine-agnostic — running it with
+    ``engine="numpy"`` and ``engine="jax"`` must agree per the oracle
+    contract (DESIGN.md §15)."""
+
+    base_name: str
+    n_members: int
+    n_rows: int
+    n_ticks: int  # T
+    dt: float  # telemetry_s
+    occ60: np.ndarray = field(repr=False)  # [N, R, T60] occupancy, 60 s grid
+    alive: np.ndarray = field(repr=False)  # [T, R] 0/1 row-crash mask
+    budget_scale: np.ndarray = field(repr=False)  # [T, R] fault derates
+    row_budget_w: np.ndarray = field(repr=False)  # [R] static budgets
+    # power plane (closed form over the Table-4 mix; watts per server)
+    p0_srv_w: float  # idle server watts
+    k_lp_w: float  # LP busy-power coefficient (x f_lp^gamma)
+    k_hp_w: float  # HP busy-power coefficient (x f_hp^gamma)
+    lp_share: float  # LP fraction of the server pool
+    gamma: float
+    n_servers: int
+    power_scale: float
+    # policy constants (resolved from the PolicySpec)
+    predictive: bool
+    t1: float
+    t2: float
+    t1_buffer: float
+    t2_buffer: float
+    lp_freq_t1: float
+    lp_freq_t2: float
+    hp_freq_t2: float
+    brake_freq: float
+    escalation_ticks: int
+    horizon_s: float
+    window: int
+    # actuation ring
+    oob_ticks: int
+    brake_ticks: int
+    ring_depth: int  # D = max(oob, brake) + 1
+    # SLO fluid proxy (per-priority clock-sensitive fraction + service time)
+    a_hp: float
+    a_lp: float
+    svc_hp: float
+    svc_lp: float
+    has_hp: bool
+    has_lp: bool
+    # impact decimation
+    stride: int
+    n_slots: int  # S = ceil(T / stride)
+    # hierarchy segment-sum fold (None = flat row accounting)
+    node_matrix: Optional[np.ndarray] = field(default=None, repr=False)  # [n_nodes, R]
+    node_names: Tuple[str, ...] = ()
+    seeds: Tuple[int, ...] = ()
+
+    @property
+    def total_budget_w(self) -> float:
+        return float(self.row_budget_w.sum())
+
+    def tick_times(self) -> np.ndarray:
+        """Telemetry timestamps: tick k samples t = (k+1) * dt."""
+        return (np.arange(self.n_ticks, dtype=np.float64) + 1.0) * self.dt
+
+
+@dataclass
+class BatchedRun:
+    """Raw output of one tick-program run (either backend).
+
+    ``brake_fire[m, k, r]`` marks the policy firing a powerbrake on row r at
+    tick k of member m — the brake-tick set the differential harness compares
+    bit-for-bit. Series fields are ``None`` when the run dropped them
+    (``keep_series=False``)."""
+
+    engine: str
+    model: TickModel
+    brake_fire: np.ndarray = field(repr=False)  # [N, T, R] bool
+    n_brakes: np.ndarray = field(repr=False)  # [N, R] int
+    peak_frac: np.ndarray = field(repr=False)  # [N]
+    mean_frac: np.ndarray = field(repr=False)  # [N]
+    impacts_hp: np.ndarray = field(repr=False)  # [N, R, S]
+    impacts_lp: np.ndarray = field(repr=False)  # [N, R, S]
+    total_frac: Optional[np.ndarray] = field(default=None, repr=False)  # [N, T]
+    row_w: Optional[np.ndarray] = field(default=None, repr=False)  # [N, T, R]
+    node_w: Optional[np.ndarray] = field(default=None, repr=False)  # [N, T, nodes]
+
+    def brake_ticks(self) -> np.ndarray:
+        """Sorted (member, tick, row) index triples of every brake firing —
+        the bit-compared set of the oracle contract."""
+        return np.argwhere(self.brake_fire)
+
+    def member_stats(self, m: int) -> LatencyStats:
+        hp = self.impacts_hp[m].ravel() if self.model.has_hp else np.zeros(0)
+        lp = self.impacts_lp[m].ravel() if self.model.has_lp else np.zeros(0)
+        return LatencyStats(hp_impacts=[float(x) for x in hp],
+                            lp_impacts=[float(x) for x in lp])
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+def _policy_constants(sc: Scenario) -> Dict[str, object]:
+    pol = sc.policy.build()
+    if isinstance(pol, PredictivePolcaPolicy):
+        predictive = True
+    elif isinstance(pol, PolcaPolicy):
+        predictive = False
+    else:
+        raise ValueError(
+            f"batched engine supports polca/polca-predictive policies; "
+            f"scenario {sc.name!r} uses {sc.policy.kind!r} (run it on the "
+            f"event-driven engine instead)")
+    return dict(
+        predictive=predictive,
+        t1=float(pol.t1), t2=float(pol.t2),
+        t1_buffer=float(pol.t1_buffer), t2_buffer=float(pol.t2_buffer),
+        lp_freq_t1=float(pol.lp_freq_t1), lp_freq_t2=float(pol.lp_freq_t2),
+        hp_freq_t2=float(pol.hp_freq_t2), brake_freq=float(pol.brake_freq),
+        escalation_ticks=int(pol.escalation_ticks),
+        horizon_s=float(getattr(pol, "horizon_s", 40.0)),
+        window=int(getattr(pol, "window", 8)),
+    )
+
+
+def _power_constants(sc: Scenario) -> Dict[str, float]:
+    """Closed-form power/SLO coefficients over the Table-4 workload mix.
+
+    A busy server running class w draws ``idle + k_w * f^gamma`` watts where
+    ``k_w = n_dev * (p_peak - idle) * u_eff_w`` and ``u_eff_w`` is the
+    prefill/decode-time-weighted roofline utilization — exactly
+    ``DevicePower.power`` evaluated at the class's two
+    :class:`~repro.core.workload.PhasePoint` operating points. Classes then
+    collapse into one LP and one HP coefficient via share x priority mix."""
+    wls, shares = build_workloads(sc)
+    server = sc.fleet.server()
+    dev = server.device
+    k_lp = k_hp = lp_share = 0.0
+    a_num = {"high": 0.0, "low": 0.0}
+    svc_num = {"high": 0.0, "low": 0.0}
+    wgt_tot = {"high": 0.0, "low": 0.0}
+    for wl, share, spec in zip(wls, shares, TABLE4):
+        mean_out = 0.5 * (spec.out_range[0] + spec.out_range[1])
+        t_total = wl.timing.t_prefill + mean_out * wl.timing.t_token
+        f_pre = wl.timing.t_prefill / t_total
+        u_eff = 0.0
+        cf_eff = 0.0
+        for frac, pt in ((f_pre, wl.timing.prefill_point),
+                         (1.0 - f_pre, wl.timing.token_point)):
+            u = min(1.0, dev.w_compute * min(pt.u_compute, 1.0)
+                    + dev.w_memory * min(pt.u_memory, 1.0))
+            u_eff += frac * u
+            cf_eff += frac * pt.compute_frac
+        k_srv = server.n_devices * (dev.p_peak - dev.idle_w) * u_eff
+        mix = wl.priority_mix
+        k_hp += share * mix * k_srv
+        k_lp += share * (1.0 - mix) * k_srv
+        lp_share += share * (1.0 - mix)
+        for prio, wgt in (("high", share * mix), ("low", share * (1.0 - mix))):
+            wgt_tot[prio] += wgt
+            a_num[prio] += wgt * cf_eff
+            svc_num[prio] += wgt * t_total
+    out = dict(p0_srv_w=float(server.idle_power), k_lp_w=float(k_lp),
+               k_hp_w=float(k_hp), lp_share=float(lp_share),
+               gamma=float(dev.gamma))
+    for prio, key in (("high", "hp"), ("low", "lp")):
+        has = wgt_tot[prio] > 0.0
+        out[f"has_{key}"] = bool(has)
+        out[f"a_{key}"] = float(a_num[prio] / wgt_tot[prio]) if has else 0.0
+        out[f"svc_{key}"] = float(svc_num[prio] / wgt_tot[prio]) if has else 1.0
+    return out
+
+
+def _member_occupancy(sc: Scenario, seeds: Sequence[int], t60: np.ndarray,
+                      n_rows: int, n_servers: int) -> np.ndarray:
+    """[N, R, T60] occupancy: the scenario's registered generator per member
+    seed + row, plus a member-seeded CLT busy-fraction jitter
+    (sigma = sqrt(occ(1-occ)/n_servers)) standing in for the arrival-sampling
+    noise of the DES — without it the diurnal family (which deliberately
+    ignores the member seed) would collapse every member onto one curve."""
+    gen = get_occupancy_generator(sc.traffic.generator)
+    occ = np.empty((len(seeds), n_rows, len(t60)), dtype=np.float64)
+    for mi, seed in enumerate(seeds):
+        for r in range(n_rows):
+            base = np.asarray(gen(t60, seed=int(seed), peak=sc.traffic.occ_peak,
+                                  n_rows=n_rows, row=r,
+                                  **sc.traffic.gen_params), dtype=np.float64)
+            rng = np.random.default_rng([int(seed), r, _JITTER_SALT])
+            sigma = np.sqrt(np.clip(base * (1.0 - base), 0.0, None) / n_servers)
+            occ[mi, r] = np.clip(base + rng.standard_normal(len(t60)) * sigma,
+                                 0.0, 1.0)
+    return occ
+
+
+def _lower_faults(sc: Scenario, n_ticks: int, dt: float, n_rows: int,
+                  hierarchy) -> Tuple[np.ndarray, np.ndarray]:
+    """Fault timeline -> ([T, R] alive mask, [T, R] budget scale).
+
+    Row crashes zero a row's occupancy (it idles until revived); budget
+    events scale the *derated subtree's* row budgets per tick, ramping
+    linearly over ``ramp_s`` and restoring at ``until`` — the same
+    conservative-tree semantics the ChaosInjector enforces on the DES path.
+    Unlike ``run_experiment``, faults here do not require a RoutingSpec: the
+    tick model has no dispatcher to fence, so the masks are the whole story."""
+    alive = np.ones((n_ticks, n_rows), dtype=np.float64)
+    bscale = np.ones((n_ticks, n_rows), dtype=np.float64)
+    faults = sc.faults
+    if faults is None or faults.is_noop:
+        return alive, bscale
+    names = list(hierarchy.names) if hierarchy is not None else None
+    faults.validate(duration_s=sc.duration_s, n_rows=n_rows, node_names=names)
+    t_ticks = (np.arange(n_ticks, dtype=np.float64) + 1.0) * dt
+    for e in sorted(faults.row_events(), key=lambda e: e.t):
+        alive[t_ticks >= e.t, int(e.row)] = (
+            0.0 if e.kind == "row-crash" else 1.0)
+    for e in faults.budget_events():
+        if e.kind == "site-demand-response" or hierarchy is None:
+            if e.kind == "node-derate" and hierarchy is None:
+                raise ValueError(
+                    f"fault event {e.describe()} targets a hierarchy node "
+                    f"but scenario {sc.name!r} has no HierarchySpec")
+            rows = np.arange(n_rows)
+        else:
+            rows = hierarchy.subtree_leaves(list(hierarchy.names).index(e.node))
+        ramp = (np.clip((t_ticks - e.t) / e.ramp_s, 0.0, 1.0) if e.ramp_s > 0
+                else (t_ticks >= e.t).astype(np.float64))
+        scale = 1.0 - (1.0 - e.factor) * ramp
+        if e.until is not None:
+            scale = np.where(t_ticks >= e.until, 1.0, scale)
+        bscale[:, rows] *= scale[:, None]
+    return alive, bscale
+
+
+def lower_ensemble(spec: EnsembleSpec, *, budget_w: Optional[float] = None
+                   ) -> Tuple[TickModel, List[Scenario], float]:
+    """Lower an EnsembleSpec to the batched tick program. Returns
+    ``(model, member_scenarios, resolved_budget_w)`` — members carry the
+    same pinned budget ``run_ensemble`` would pin, so planner decisions on
+    either engine answer the same question."""
+    sc = spec.base
+    if sc.routing is not None:
+        raise ValueError(
+            f"batched engine runs unrouted row/cluster scenarios; "
+            f"{sc.name!r} carries a RoutingSpec (use engine='numpy' — the "
+            f"event-driven fleet path)")
+    if sc.duration_s < 120.0:
+        raise ValueError(
+            f"batched engine needs duration_s >= 120 (two 60 s occupancy "
+            f"samples to interpolate); {sc.name!r} has {sc.duration_s:g}")
+    dt = float(sc.telemetry.telemetry_s)
+    n_ticks = int(math.floor(sc.duration_s / dt))
+    t60 = np.arange(0.0, sc.duration_s, 60.0)
+    fleet = sc.fleet
+    server = fleet.server()
+    budget = (resolve_ensemble_budget(sc) if budget_w is None
+              else float(budget_w))
+    members = spec.member_scenarios(budget)
+
+    hierarchy = None
+    node_matrix = None
+    node_names: Tuple[str, ...] = ()
+    base_budgets = row_budgets(sc, budget, server)
+    if sc.hierarchy is not None:
+        if sc.hierarchy.n_rows != fleet.n_rows:
+            raise ValueError(
+                f"hierarchy shape {sc.hierarchy.shape} implies "
+                f"{sc.hierarchy.n_rows} rows; fleet has {fleet.n_rows}")
+        hierarchy = sc.hierarchy.build(base_budgets)
+        row_budget = np.asarray(hierarchy.leaf_budget_w, dtype=np.float64)
+        node_matrix = np.zeros((hierarchy.n_nodes, fleet.n_rows))
+        for n in range(hierarchy.n_nodes):
+            node_matrix[n, hierarchy.leaf_desc[n]] = 1.0
+        node_names = tuple(hierarchy.names)
+    else:
+        row_budget = np.asarray(base_budgets, dtype=np.float64)
+
+    alive, bscale = _lower_faults(sc, n_ticks, dt, fleet.n_rows, hierarchy)
+    occ60 = _member_occupancy(sc, spec.seeds(), t60, fleet.n_rows,
+                              fleet.n_servers)
+    stride = max(1, math.ceil(n_ticks / _IMPACT_SLOTS))
+    tc = sc.telemetry
+    oob_ticks = max(1, math.ceil(tc.oob_latency_s / dt))
+    brake_ticks = max(1, math.ceil(tc.brake_latency_s / dt))
+    model = TickModel(
+        base_name=sc.name, n_members=spec.n_seeds, n_rows=fleet.n_rows,
+        n_ticks=n_ticks, dt=dt, occ60=occ60, alive=alive, budget_scale=bscale,
+        row_budget_w=row_budget, n_servers=fleet.n_servers,
+        power_scale=float(sc.power_scale),
+        oob_ticks=oob_ticks, brake_ticks=brake_ticks,
+        ring_depth=max(oob_ticks, brake_ticks) + 1,
+        stride=stride, n_slots=math.ceil(n_ticks / stride),
+        node_matrix=node_matrix, node_names=node_names,
+        seeds=tuple(spec.seeds()),
+        **_policy_constants(sc), **_power_constants(sc))
+    return model, members, budget
+
+
+# ---------------------------------------------------------------------------
+# shared tick math (both backends call these with their own array module)
+# ---------------------------------------------------------------------------
+
+def _row_power_w(model: TickModel, occ, f_lp, f_hp, xp):
+    """Per-row watts at occupancy + frequency state (the closed-form fluid
+    power plane; identical expression on both backends)."""
+    busy = (model.k_lp_w * f_lp ** model.gamma
+            + model.k_hp_w * f_hp ** model.gamma)
+    return (model.power_scale * model.n_servers
+            * (model.p0_srv_w + occ * busy))
+
+
+def _lp_power_w(model: TickModel, occ, f_lp, xp):
+    return (model.power_scale * model.n_servers
+            * (model.lp_share * model.p0_srv_w
+               + occ * model.k_lp_w * f_lp ** model.gamma))
+
+
+def _slo_step(model: TickModel, occ, f_lp, f_hp, backlog_hp, backlog_lp, xp):
+    """One tick of the per-priority fluid SLO proxy: slowdown from the DVFS
+    perf model (``a/f + (1-a)``) plus a queue-delay backlog integrator —
+    occupancy x slowdown > 1 means the row can't keep up and delay accrues.
+    Returns (backlog_hp', backlog_lp', impact_hp, impact_lp)."""
+    sd_hp = model.a_hp / xp.maximum(f_hp, 1e-3) + (1.0 - model.a_hp)
+    sd_lp = model.a_lp / xp.maximum(f_lp, 1e-3) + (1.0 - model.a_lp)
+    backlog_hp = xp.maximum(0.0, backlog_hp + (occ * sd_hp - 1.0) * model.dt)
+    backlog_lp = xp.maximum(0.0, backlog_lp + (occ * sd_lp - 1.0) * model.dt)
+    imp_hp = (sd_hp - 1.0) + backlog_hp / model.svc_hp
+    imp_lp = (sd_lp - 1.0) + backlog_lp / model.svc_lp
+    return backlog_hp, backlog_lp, imp_hp, imp_lp
+
+
+def _interp_weights(model: TickModel) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-tick (left index, right weight) into the 60 s occupancy grid —
+    precomputed once so both backends interpolate identically."""
+    t = model.tick_times()
+    g = t / 60.0
+    n60 = model.occ60.shape[2]
+    i = np.clip(np.floor(g).astype(np.int64), 0, n60 - 2)
+    w = np.clip(g - i, 0.0, 1.0)
+    return i, w
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle: the tick/ring contract driven by the real policy objects
+# ---------------------------------------------------------------------------
+
+def _run_oracle(model: TickModel, members: List[Scenario],
+                keep_series: bool) -> BatchedRun:
+    N, R, T, D = model.n_members, model.n_rows, model.n_ticks, model.ring_depth
+    i_idx, i_w = _interp_weights(model)
+    t_ticks = model.tick_times()
+    brake_fire = np.zeros((N, T, R), dtype=bool)
+    n_brakes = np.zeros((N, R), dtype=np.int64)
+    peak = np.zeros(N)
+    mean = np.zeros(N)
+    imp_hp = np.zeros((N, R, model.n_slots))
+    imp_lp = np.zeros((N, R, model.n_slots))
+    total = np.zeros((N, T)) if keep_series else None
+    row_w_out = np.zeros((N, T, R)) if keep_series else None
+    total_budget = model.total_budget_w
+
+    for m, member in enumerate(members):
+        policies = [member.policy.build() for _ in range(R)]
+        f_lp = np.ones(R)
+        f_hp = np.ones(R)
+        ring = np.full((R, D, 2), np.nan)
+        backlog_hp = np.zeros(R)
+        backlog_lp = np.zeros(R)
+        occ60 = model.occ60[m]  # [R, T60]
+        frac_sum = 0.0
+        frac_peak = 0.0
+        for k in range(T):
+            slot = k % D
+            pend = ring[:, slot, :]
+            has = ~np.isnan(pend)
+            f_lp = np.where(has[:, 0], pend[:, 0], f_lp)
+            f_hp = np.where(has[:, 1], pend[:, 1], f_hp)
+            ring[:, slot, :] = np.nan
+            occ = (occ60[:, i_idx[k]] * (1.0 - i_w[k])
+                   + occ60[:, i_idx[k] + 1] * i_w[k]) * model.alive[k]
+            rw = _row_power_w(model, occ, f_lp, f_hp, np)
+            frac = float(rw.sum()) / total_budget
+            frac_peak = max(frac_peak, frac)
+            frac_sum += frac
+            if keep_series:
+                total[m, k] = frac
+                row_w_out[m, k] = rw
+            tick_budget = model.row_budget_w * model.budget_scale[k]
+            p = rw / tick_budget
+            lp_frac = _lp_power_w(model, occ, f_lp, np) / tick_budget
+            for r in range(R):
+                pol = policies[r]
+                before = pol.n_brakes
+                cmds = pol.observe(Telemetry(
+                    t=float(t_ticks[k]), power_frac=float(p[r]),
+                    lp_power_frac=float(lp_frac[r]), row_index=r))
+                if pol.n_brakes > before:
+                    brake_fire[m, k, r] = True
+                for cmd in cmds:
+                    d = model.brake_ticks if cmd.brake else model.oob_ticks
+                    s = (k + d) % D
+                    if cmd.lp_freq is not None:
+                        ring[r, s, 0] = cmd.lp_freq
+                    if cmd.hp_freq is not None:
+                        ring[r, s, 1] = cmd.hp_freq
+            backlog_hp, backlog_lp, ih, il = _slo_step(
+                model, occ, f_lp, f_hp, backlog_hp, backlog_lp, np)
+            if k % model.stride == 0:
+                imp_hp[m, :, k // model.stride] = ih
+                imp_lp[m, :, k // model.stride] = il
+        n_brakes[m] = [pol.n_brakes for pol in policies]
+        peak[m] = frac_peak
+        mean[m] = frac_sum / T
+
+    node_w = None
+    if keep_series and model.node_matrix is not None:
+        node_w = np.einsum("ntr,mr->ntm", row_w_out, model.node_matrix)
+    return BatchedRun(engine="numpy", model=model, brake_fire=brake_fire,
+                      n_brakes=n_brakes, peak_frac=peak, mean_frac=mean,
+                      impacts_hp=imp_hp, impacts_lp=imp_lp, total_frac=total,
+                      row_w=row_w_out, node_w=node_w)
+
+
+# ---------------------------------------------------------------------------
+# jax engine: lax.scan over ticks, vmap over members
+# ---------------------------------------------------------------------------
+
+class _JaxCfg(NamedTuple):
+    """Static (compile-time) shape/flag key for the jitted runner."""
+    T: int
+    R: int
+    D: int
+    W: int
+    S: int
+    stride: int
+    oob_ticks: int
+    brake_ticks: int
+    esc: int
+    predictive: bool
+    keep_series: bool
+
+
+@lru_cache(maxsize=32)
+def _jax_runner(cfg: _JaxCfg):
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def polca_step(c, p_obs, p_raw, lp_frac, consts):
+        """One vectorized tick of PolcaPolicy.observe over R rows. Mirrors
+        core.policy line for line: the overload path sets every cap flag and
+        skips releases; cap/escalation branches run only out of overload;
+        releases read the *post-cap* flags, and the T1 release additionally
+        requires T2 to have just released or been clear."""
+        t1c, t2c, hpc, brk, t2s = c["t1c"], c["t2c"], c["hpc"], c["brk"], c["t2s"]
+        over = p_obs > 1.0
+        fire = over & ~brk
+        rel_brake = ~over & brk
+        if cfg.predictive:
+            informed = (t2c & ~hpc & (p_raw > consts["t2"])
+                        & (lp_frac < p_raw - consts["t2"]))
+            t2s = jnp.where(informed, cfg.esc, t2s)
+        hi2 = p_obs > consts["t2"]
+        cap_t2 = ~over & hi2 & ~t2c
+        esc_tick = ~over & hi2 & t2c & ~hpc
+        t2s = jnp.where(cap_t2, 0, jnp.where(esc_tick, t2s + 1, t2s))
+        cap_hp = esc_tick & (t2s >= cfg.esc)
+        cap_t1 = ~over & ~hi2 & (p_obs > consts["t1"]) & ~t1c
+        t2c_mid = t2c | over | cap_t2
+        t1c_mid = t1c | over | cap_t2 | cap_t1
+        hpc_mid = hpc | over | cap_hp
+        rel_t2 = ~over & t2c_mid & (p_obs < consts["t2"] - consts["t2_buf"])
+        t2c = t2c_mid & ~rel_t2
+        hpc = hpc_mid & ~rel_t2
+        rel_t1 = (~over & t1c_mid & ~t2c
+                  & (p_obs < consts["t1"] - consts["t1_buf"]))
+        t1c = t1c_mid & ~rel_t1
+        new = dict(c, t1c=t1c, t2c=t2c, hpc=hpc, brk=over, t2s=t2s,
+                   nbr=c["nbr"] + fire.astype(jnp.int32))
+        # command emission per frequency field, in the policy's cmd-list
+        # order (later overwrites earlier — the DES same-due-time rule)
+        nanv = jnp.full(p_obs.shape, jnp.nan)
+        lp_cmd = nanv
+        hp_cmd = nanv
+        lp_cmd = jnp.where(rel_brake, consts["lp_t2"], lp_cmd)
+        hp_cmd = jnp.where(rel_brake, consts["hp_t2"], hp_cmd)
+        lp_cmd = jnp.where(cap_t2, consts["lp_t2"], lp_cmd)
+        hp_cmd = jnp.where(cap_hp, consts["hp_t2"], hp_cmd)
+        lp_cmd = jnp.where(cap_t1, consts["lp_t1"], lp_cmd)
+        lp_cmd = jnp.where(rel_t2, consts["lp_t1"], lp_cmd)
+        hp_cmd = jnp.where(rel_t2, 1.0, hp_cmd)
+        lp_cmd = jnp.where(rel_t1, 1.0, lp_cmd)
+        return new, fire, lp_cmd, hp_cmd
+
+    def predict(c, t, p, consts):
+        """PredictivePolcaPolicy._predict: windowed least-squares slope
+        extrapolated horizon_s ahead, clamped below 1.0 unless the measured
+        power already breached (brakes are never predicted). Raw samples
+        enter the history, exactly as in the reference policy."""
+        ht, hp, k = c["hist_t"], c["hist_p"], c["k"]
+        W = cfg.W
+        idx = jnp.minimum(k, W - 1)
+        ins_t = ht.at[:, idx].set(t)
+        ins_p = hp.at[:, idx].set(p)
+        roll_t = jnp.roll(ht, -1, axis=1).at[:, -1].set(t)
+        roll_p = jnp.roll(hp, -1, axis=1).at[:, -1].set(p)
+        grow = k < W
+        ht = jnp.where(grow, ins_t, roll_t)
+        hp = jnp.where(grow, ins_p, roll_p)
+        nn = jnp.minimum(k + 1, W).astype(jnp.float64)
+        valid = (jnp.arange(W) < jnp.minimum(k + 1, W))[None, :]
+        tm = jnp.sum(jnp.where(valid, ht, 0.0), axis=1) / nn
+        pm = jnp.sum(jnp.where(valid, hp, 0.0), axis=1) / nn
+        dt_ = jnp.where(valid, ht - tm[:, None], 0.0)
+        dp_ = jnp.where(valid, hp - pm[:, None], 0.0)
+        num = jnp.sum(dt_ * dp_, axis=1)
+        den = jnp.sum(dt_ * dt_, axis=1)
+        slope = num / jnp.where(den > 0.0, den, 1.0)
+        p_ext = jnp.where((nn >= 3) & (den > 0.0),
+                          jnp.maximum(p, p + slope * consts["horizon"]), p)
+        p_obs = jnp.where(p <= 1.0, jnp.minimum(p_ext, 1.0 - 1e-9), p_ext)
+        return dict(c, hist_t=ht, hist_p=hp), p_obs
+
+    def run(scalars, occ60_all, consts, xs):
+        T, R, D, S = cfg.T, cfg.R, cfg.D, cfg.S
+
+        def step_for(occ60):
+            def step(c, x):
+                k, t, ii, iw, alive, bscale = x
+                slot = k % D
+                pend = lax.dynamic_index_in_dim(c["ring"], slot, axis=1,
+                                                keepdims=False)  # [R, 2]
+                has = ~jnp.isnan(pend)
+                f_lp = jnp.where(has[:, 0], pend[:, 0], c["f_lp"])
+                f_hp = jnp.where(has[:, 1], pend[:, 1], c["f_hp"])
+                ring = lax.dynamic_update_index_in_dim(
+                    c["ring"], jnp.full((R, 2), jnp.nan), slot, axis=1)
+                occ = ((occ60[:, ii] * (1.0 - iw) + occ60[:, ii + 1] * iw)
+                       * alive)
+                rw = _row_power_w(scalars, occ, f_lp, f_hp, jnp)
+                frac = jnp.sum(rw) / consts["total_budget"]
+                tick_budget = consts["row_budget"] * bscale
+                p_raw = rw / tick_budget
+                lp_frac = _lp_power_w(scalars, occ, f_lp, jnp) / tick_budget
+                c = dict(c, f_lp=f_lp, f_hp=f_hp, ring=ring, k=k)
+                if cfg.predictive:
+                    c, p_obs = predict(c, t, p_raw, consts)
+                else:
+                    p_obs = p_raw
+                c, fire, lp_cmd, hp_cmd = polca_step(c, p_obs, p_raw, lp_frac,
+                                                     consts)
+                ring = c["ring"]
+                s_oob = (k + cfg.oob_ticks) % D
+                s_brk = (k + cfg.brake_ticks) % D
+                oob_slot = lax.dynamic_index_in_dim(ring, s_oob, axis=1,
+                                                    keepdims=False)
+                oob_slot = jnp.stack([
+                    jnp.where(jnp.isnan(lp_cmd), oob_slot[:, 0], lp_cmd),
+                    jnp.where(jnp.isnan(hp_cmd), oob_slot[:, 1], hp_cmd)],
+                    axis=1)
+                ring = lax.dynamic_update_index_in_dim(ring, oob_slot, s_oob,
+                                                       axis=1)
+                brk_slot = lax.dynamic_index_in_dim(ring, s_brk, axis=1,
+                                                    keepdims=False)
+                brk_val = jnp.where(fire[:, None],
+                                    jnp.full((R, 2), consts["brake_freq"]),
+                                    brk_slot)
+                ring = lax.dynamic_update_index_in_dim(ring, brk_val, s_brk,
+                                                       axis=1)
+                bh, bl, ih, il = _slo_step(scalars, occ, f_lp, f_hp,
+                                           c["backlog_hp"], c["backlog_lp"],
+                                           jnp)
+                imp = jnp.stack([ih, il], axis=1)  # [R, 2]
+                zero = jnp.asarray(0, k.dtype)
+                upd = lax.dynamic_update_slice(c["imp"], imp[None],
+                                               (k // cfg.stride, zero, zero))
+                imp_buf = jnp.where(k % cfg.stride == 0, upd, c["imp"])
+                c = dict(c, ring=ring, backlog_hp=bh, backlog_lp=bl,
+                         imp=imp_buf, peak=jnp.maximum(c["peak"], frac),
+                         fsum=c["fsum"] + frac)
+                ys = (fire, frac, rw) if cfg.keep_series else (fire,)
+                return c, ys
+            return step
+
+        def run_member(occ60):
+            carry = dict(
+                f_lp=jnp.ones(R), f_hp=jnp.ones(R),
+                ring=jnp.full((R, D, 2), jnp.nan),
+                t1c=jnp.zeros(R, bool), t2c=jnp.zeros(R, bool),
+                hpc=jnp.zeros(R, bool), brk=jnp.zeros(R, bool),
+                t2s=jnp.zeros(R, jnp.int32), nbr=jnp.zeros(R, jnp.int32),
+                backlog_hp=jnp.zeros(R), backlog_lp=jnp.zeros(R),
+                imp=jnp.zeros((S, R, 2)), peak=jnp.asarray(0.0),
+                fsum=jnp.asarray(0.0), k=jnp.asarray(0, jnp.int32),
+            )
+            if cfg.predictive:
+                carry.update(hist_t=jnp.zeros((R, cfg.W)),
+                             hist_p=jnp.zeros((R, cfg.W)))
+            final, ys = lax.scan(step_for(occ60), carry, xs)
+            out = dict(fire=ys[0], nbr=final["nbr"], peak=final["peak"],
+                       mean=final["fsum"] / T, imp=final["imp"])
+            if cfg.keep_series:
+                out.update(frac=ys[1], row_w=ys[2])
+            return out
+
+        return jax.vmap(run_member)(occ60_all)
+
+    return jax.jit(run, static_argnums=(0,))
+
+
+def _run_jax(model: TickModel, keep_series: bool) -> BatchedRun:
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    cfg = _JaxCfg(T=model.n_ticks, R=model.n_rows, D=model.ring_depth,
+                  W=max(1, model.window), S=model.n_slots,
+                  stride=model.stride, oob_ticks=model.oob_ticks,
+                  brake_ticks=model.brake_ticks, esc=model.escalation_ticks,
+                  predictive=model.predictive, keep_series=keep_series)
+    runner = _jax_runner(cfg)
+    i_idx, i_w = _interp_weights(model)
+    with enable_x64():
+        consts = dict(
+            t1=jnp.asarray(model.t1), t2=jnp.asarray(model.t2),
+            t1_buf=jnp.asarray(model.t1_buffer),
+            t2_buf=jnp.asarray(model.t2_buffer),
+            lp_t1=jnp.asarray(model.lp_freq_t1),
+            lp_t2=jnp.asarray(model.lp_freq_t2),
+            hp_t2=jnp.asarray(model.hp_freq_t2),
+            brake_freq=jnp.asarray(model.brake_freq),
+            horizon=jnp.asarray(model.horizon_s),
+            total_budget=jnp.asarray(model.total_budget_w),
+            row_budget=jnp.asarray(model.row_budget_w),
+        )
+        xs = (jnp.arange(model.n_ticks, dtype=jnp.int32),
+              jnp.asarray(model.tick_times()),
+              jnp.asarray(i_idx, dtype=jnp.int32), jnp.asarray(i_w),
+              jnp.asarray(model.alive), jnp.asarray(model.budget_scale))
+        # the static arg: closed-form scalars only, hashable via the frozen
+        # dataclass minus its array fields
+        scalars = _ScalarModel.from_model(model)
+        out = runner(scalars, jnp.asarray(model.occ60), consts, xs)
+        fire = np.asarray(out["fire"])  # [N, T, R]
+        imp = np.asarray(out["imp"])  # [N, S, R, 2]
+        run = BatchedRun(
+            engine="jax", model=model,
+            brake_fire=np.asarray(fire, dtype=bool),
+            n_brakes=np.asarray(out["nbr"], dtype=np.int64),
+            peak_frac=np.asarray(out["peak"], dtype=np.float64),
+            mean_frac=np.asarray(out["mean"], dtype=np.float64),
+            impacts_hp=np.ascontiguousarray(imp[:, :, :, 0].transpose(0, 2, 1)),
+            impacts_lp=np.ascontiguousarray(imp[:, :, :, 1].transpose(0, 2, 1)),
+        )
+        if keep_series:
+            run.total_frac = np.asarray(out["frac"], dtype=np.float64)
+            run.row_w = np.asarray(out["row_w"], dtype=np.float64)
+            if model.node_matrix is not None:
+                run.node_w = np.einsum("ntr,mr->ntm", run.row_w,
+                                       model.node_matrix)
+    return run
+
+
+@dataclass(frozen=True)
+class _ScalarModel:
+    """The closed-form scalar slice of a TickModel — hashable, so it can be
+    a static jit argument (the arrays travel as traced operands)."""
+    dt: float
+    p0_srv_w: float
+    k_lp_w: float
+    k_hp_w: float
+    lp_share: float
+    gamma: float
+    n_servers: int
+    power_scale: float
+    a_hp: float
+    a_lp: float
+    svc_hp: float
+    svc_lp: float
+
+    @classmethod
+    def from_model(cls, m: TickModel) -> "_ScalarModel":
+        return cls(dt=m.dt, p0_srv_w=m.p0_srv_w, k_lp_w=m.k_lp_w,
+                   k_hp_w=m.k_hp_w, lp_share=m.lp_share, gamma=m.gamma,
+                   n_servers=m.n_servers, power_scale=m.power_scale,
+                   a_hp=m.a_hp, a_lp=m.a_lp, svc_hp=m.svc_hp,
+                   svc_lp=m.svc_lp)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def run_tick_model(model: TickModel, members: List[Scenario], *,
+                   engine: str = "jax",
+                   keep_series: bool = True) -> BatchedRun:
+    """Run a lowered tick program on one backend. ``engine="numpy"`` is the
+    oracle (real policy objects through Telemetry); ``engine="jax"`` the
+    vectorized device program. Differential tests run both and compare."""
+    if engine == "numpy":
+        return _run_oracle(model, members, keep_series)
+    if engine == "jax":
+        return _run_jax(model, keep_series)
+    raise ValueError(f"unknown batched engine {engine!r} "
+                     "(expected 'numpy' or 'jax')")
+
+
+def _to_ensemble_result(model: TickModel, members: List[Scenario],
+                        budget_w: float, run: BatchedRun) -> EnsembleResult:
+    """Adapt a BatchedRun to the EnsembleResult shape the planner and the
+    distributional statistics consume. ``power_frac`` rows are member
+    total-budget fractions (the same quantity the DES engine stacks —
+    ``SimResult.power_w`` records the telemetry fraction series)."""
+    stats: List[MemberStats] = []
+    t = model.tick_times()
+    for m, sc in enumerate(members):
+        series = (run.total_frac[m] if run.total_frac is not None else None)
+        res = SimResult(
+            latency=run.member_stats(m),
+            n_brakes=int(run.n_brakes[m].sum()),
+            n_dropped=0, n_completed=0, served_tokens=0.0,
+            peak_power_frac=float(run.peak_frac[m]),
+            mean_power_frac=float(run.mean_frac[m]),
+            power_t=(t if series is not None else None),
+            power_w=series)
+        stats.append(MemberStats(sc, res, res.latency))
+    if run.total_frac is not None:
+        power = np.asarray(run.total_frac)
+        power_t = t
+    else:
+        power = np.zeros((0, 0))
+        power_t = np.zeros(0)
+    return EnsembleResult(
+        base_name=model.base_name, budget_w=budget_w, members=stats,
+        power_t=power_t, power_frac=power,
+        brake_counts=np.asarray(run.n_brakes.sum(axis=1)),
+        peak_fracs=np.asarray(run.peak_frac),
+        mean_fracs=np.asarray(run.mean_frac))
+
+
+def run_batched_ensemble(spec: EnsembleSpec, *,
+                         budget_w: Optional[float] = None,
+                         engine: str = "jax",
+                         keep_series: Optional[bool] = None) -> EnsembleResult:
+    """Evaluate an ensemble on the batched tick engine.
+
+    The drop-in dense-tail counterpart of ``montecarlo.run_ensemble`` —
+    same EnsembleResult surface, 10^4+ members in one device program.
+    ``keep_series=None`` keeps per-tick power series while ``members x
+    ticks`` stays under 4e6 cells and drops them beyond (matching the DES
+    engine's ``record_power=False`` empty-matrix shape)."""
+    if engine == "batched-numpy":  # run_ensemble's name for the tick oracle
+        engine = "numpy"
+    with get_recorder().span("mc/run_batched", base=spec.base.name,
+                             members=spec.n_seeds, engine=engine):
+        model, members, budget = lower_ensemble(spec, budget_w=budget_w)
+        if keep_series is None:
+            keep_series = model.n_members * model.n_ticks <= _SERIES_CELL_LIMIT
+        run = run_tick_model(model, members, engine=engine,
+                             keep_series=keep_series)
+        return _to_ensemble_result(model, members, budget, run)

@@ -51,6 +51,7 @@ ensembles remain worker-count-invariant and bit-reproducible (asserted in
 
 from __future__ import annotations
 
+import math
 import multiprocessing
 import os
 import warnings
@@ -164,6 +165,24 @@ class EnsembleResult:
         counts = np.sort(self.brake_counts)
         return counts, np.arange(1, len(counts) + 1) / len(counts)
 
+    def brake_cvar(self, alpha: float) -> float:
+        """CVaR_alpha of the per-member powerbrake count: the expected count
+        over the worst ``(1 - alpha)`` fraction of members.  Fractional tail
+        mass is interpolated so the estimator is continuous in alpha."""
+        return _cvar(np.asarray(self.brake_counts, float), alpha)
+
+    def slo_cvar(self, priority: str, alpha: float, q: float = 99.0) -> float:
+        """CVaR_alpha over the per-member P``q`` SLO impact of ``priority``.
+        Each member contributes one tail statistic (its own q-th percentile
+        impact); CVaR then averages the worst ``(1 - alpha)`` of those —
+        the dense-tail gate behind ``RiskConstraints.slo_cvar_alpha``."""
+        key = "hp_impacts" if priority == "high" else "lp_impacts"
+        per_member = np.asarray([
+            float(np.percentile(np.asarray(getattr(m.stats, key)), q))
+            if len(getattr(m.stats, key)) else 0.0
+            for m in self.members])
+        return _cvar(per_member, alpha)
+
     # -- power distribution -------------------------------------------------
     def peak_exceedance(self, levels: Sequence[float]) -> np.ndarray:
         """P[member peak power > level] per level (fractions of budget)."""
@@ -210,6 +229,26 @@ class EnsembleResult:
             "hp_p99": self.slo_percentile("high", 99),
             "lp_p99": self.slo_percentile("low", 99),
         }
+
+
+def _cvar(xs: np.ndarray, alpha: float) -> float:
+    """Interpolated upper-tail CVaR: mean of the worst ``(1 - alpha)``
+    probability mass of ``xs``.  ``alpha=0`` degenerates to the plain mean,
+    ``alpha -> 1`` to the sample maximum."""
+    if not 0.0 <= alpha < 1.0:
+        raise ValueError(f"alpha must be in [0, 1), got {alpha}")
+    n = xs.size
+    if n == 0:
+        return 0.0
+    ordered = np.sort(xs)[::-1]  # descending: worst first
+    mass = (1.0 - alpha) * n  # tail size in member units, may be fractional
+    if mass <= 1.0:
+        return float(ordered[0])
+    whole = int(math.floor(mass))
+    total = float(ordered[:whole].sum())
+    if whole < n and mass > whole:
+        total += (mass - whole) * float(ordered[whole])
+    return total / mass
 
 
 # ---------------------------------------------------------------------------
@@ -431,9 +470,29 @@ def resolve_ensemble_budget(base: Scenario) -> float:
     return float(budget)
 
 
-def run_ensemble(spec: EnsembleSpec, *,
-                 budget_w: Optional[float] = None) -> EnsembleResult:
-    """Evaluate all members of ``spec`` in one batched pass."""
+def run_ensemble(spec: EnsembleSpec, *, budget_w: Optional[float] = None,
+                 engine: str = "numpy") -> EnsembleResult:
+    """Evaluate all members of ``spec`` in one batched pass.
+
+    ``engine`` selects the execution backend:
+
+    * ``"numpy"`` (default) — the event-driven fork-pool oracle above, the
+      reference semantics every other backend is differentially tested
+      against;
+    * ``"jax"`` — the jit/vmap/``lax.scan`` device program in
+      :mod:`repro.provisioning.batched` (DESIGN.md §15), a fluid tick-level
+      lowering that runs 10^4+ members in one call;
+    * ``"batched-numpy"`` — the numpy tick-level oracle of that same
+      lowering (drives the real policy objects), used by the parity
+      harness.
+    """
+    if engine in ("jax", "batched-numpy"):
+        from repro.provisioning.batched import run_batched_ensemble
+        return run_batched_ensemble(spec, budget_w=budget_w, engine=engine)
+    if engine != "numpy":
+        raise ValueError(
+            f"unknown ensemble engine {engine!r}; "
+            "expected 'numpy', 'jax', or 'batched-numpy'")
     with get_recorder().span("mc/run_ensemble", base=spec.base.name,
                              members=spec.n_seeds):
         budget = (resolve_ensemble_budget(spec.base) if budget_w is None

@@ -68,7 +68,17 @@ class RiskConstraints:
     the fault-free and surviving ``safe_added_servers`` is the
     oversubscription cost of k-failure survivability. SLO gates stay on the
     fault-free ensemble: a derated fleet is expected to shed/slow, the
-    survivability question is whether the hardware brake ever fires."""
+    survivability question is whether the hardware brake ever fires.
+
+    ``slo_cvar_alpha`` activates the dense-tail CVaR gate: each probe
+    additionally requires CVaR_alpha over the per-member P``slo_cvar_q``
+    SLO impact of ``slo_cvar_priority`` requests to stay <=
+    ``max_slo_cvar``. Unlike the probability gates above (which only see
+    *whether* a member missed), CVaR prices *how bad* the worst ``(1 -
+    alpha)`` tail is — but it needs enough members for that tail to hold at
+    least one full sample, so ``plan_capacity`` validates ``n_seeds >=
+    ceil(1 / (1 - alpha))`` and the intended pairing is ``engine="jax"``
+    dense tails (DESIGN.md §15)."""
 
     max_brake_prob: float = 0.0  # P[member exceeds the brake budget]
     max_brakes: int = 0  # brakes tolerated per realization/horizon
@@ -77,6 +87,10 @@ class RiskConstraints:
     survive: Optional[FaultSpec] = None  # fault timeline the plan must ride through
     max_fault_brake_prob: float = 0.0  # P[faulted member exceeds fault budget]
     max_fault_brakes: int = 0  # brakes tolerated per faulted realization
+    slo_cvar_alpha: Optional[float] = None  # None: CVaR gate off
+    max_slo_cvar: float = 0.0  # bound on CVaR_alpha[per-member Pq impact]
+    slo_cvar_priority: str = "high"  # which priority class the gate watches
+    slo_cvar_q: float = 99.0  # per-member tail percentile fed into CVaR
 
 
 @dataclass
@@ -90,6 +104,7 @@ class PlanPoint:
     slo_violation_prob: float
     peak_frac_max: float
     fault_brake_prob: Optional[float] = None  # survivability gate (survive set)
+    slo_cvar: Optional[float] = None  # CVaR gate value (slo_cvar_alpha set)
     ensemble: Optional[EnsembleResult] = field(default=None, repr=False)
 
 
@@ -134,7 +149,8 @@ def plan_capacity(base: Scenario, *,
                   max_added_frac: float = 0.60,
                   budget_w: Optional[float] = None,
                   n_workers: Optional[int] = None,
-                  keep_ensembles: bool = False) -> PlanResult:
+                  keep_ensembles: bool = False,
+                  engine: str = "numpy") -> PlanResult:
     """Maximum deployable fleet for ``base``'s traffic family under
     ``constraints``.
 
@@ -143,6 +159,12 @@ def plan_capacity(base: Scenario, *,
     ensemble at a pinned budget (resolved from ``base`` once unless
     ``budget_w`` pins it externally — e.g. to plan several traffic scenarios
     against the same baseline-calibrated envelope).
+
+    ``engine`` selects the ensemble backend per :func:`run_ensemble` —
+    ``"jax"`` is the dense-tail mode that makes 10^3+-seed probes (and so
+    the CVaR gate) affordable. ``constraints.survive`` requires the
+    event-driven ``"numpy"`` engine (the chaos injector rides the
+    FleetSimulator, which the tick lowering rejects).
     """
     n_prov = base.fleet.n_provisioned
     survive = constraints.survive
@@ -153,6 +175,20 @@ def plan_capacity(base: Scenario, *,
             f"RiskConstraints.survive needs a routed-fleet scenario (the "
             f"chaos engine rides the FleetSimulator); {base.name!r} has no "
             f"RoutingSpec")
+    if survive is not None and engine != "numpy":
+        raise ValueError(
+            "RiskConstraints.survive needs engine='numpy': the survivability "
+            "gate runs the routed FleetSimulator, which the batched tick "
+            f"engines do not model (got engine={engine!r})")
+    cvar_alpha = constraints.slo_cvar_alpha
+    if cvar_alpha is not None:
+        min_seeds = int(math.ceil(1.0 / (1.0 - cvar_alpha)))
+        if n_seeds < min_seeds:
+            raise ValueError(
+                f"slo_cvar_alpha={cvar_alpha} needs n_seeds >= {min_seeds} "
+                f"for the (1 - alpha) tail to hold a full member (got "
+                f"n_seeds={n_seeds}); dense tails are what engine='jax' is "
+                f"for")
     budget = resolve_ensemble_budget(base) if budget_w is None else float(budget_w)
     probes: List[PlanPoint] = []
 
@@ -163,9 +199,13 @@ def plan_capacity(base: Scenario, *,
             ens = run_ensemble(EnsembleSpec(sc, n_seeds=n_seeds, seed0=seed0,
                                             n_workers=n_workers,
                                             with_reference=True),
-                               budget_w=budget)
+                               budget_w=budget, engine=engine)
             brake_p = ens.brake_prob(constraints.max_brakes)
             slo_p = _violation_prob(ens, constraints.slo)
+            cvar: Optional[float] = None
+            if cvar_alpha is not None:
+                cvar = ens.slo_cvar(constraints.slo_cvar_priority,
+                                    cvar_alpha, q=constraints.slo_cvar_q)
             fault_p: Optional[float] = None
             if survive is not None:
                 # same seeds + pinned budget, fault timeline injected: the only
@@ -180,11 +220,13 @@ def plan_capacity(base: Scenario, *,
             added_servers=k, added_frac=k / n_prov,
             feasible=(brake_p <= constraints.max_brake_prob + _EPS
                       and slo_p <= constraints.max_slo_violation_prob + _EPS
+                      and (cvar is None
+                           or cvar <= constraints.max_slo_cvar + _EPS)
                       and (fault_p is None
                            or fault_p <= constraints.max_fault_brake_prob + _EPS)),
             brake_prob=brake_p, slo_violation_prob=slo_p,
             peak_frac_max=float(ens.peak_fracs.max()) if len(ens.peak_fracs) else 0.0,
-            fault_brake_prob=fault_p,
+            fault_brake_prob=fault_p, slo_cvar=cvar,
             ensemble=ens if keep_ensembles else None)
         probes.append(pt)
         if rec.enabled:

@@ -1,0 +1,132 @@
+"""Property-test layer: real hypothesis when installed, a seeded shim when not.
+
+CI installs ``hypothesis`` via requirements-dev.txt and gets the real
+shrinking/coverage engine. Containers without it (the tier-1 image bakes only
+the runtime stack) used to skip every property module outright via
+``pytest.importorskip``; this shim keeps those invariants exercised
+everywhere by replaying each property over a deterministic seeded-RNG sample
+instead. The shim draws are reproducible (seeded from the test's qualified
+name + example index, not the process hash seed) and deliberately
+boundary-biased, but it does not shrink failures — when a property fails
+under the shim, re-run under real hypothesis for a minimal counterexample.
+
+Only the API surface the test-suite uses is shimmed: ``given``, ``settings``
+(unknown kwargs ignored), and ``st.floats / integers / lists / booleans /
+sampled_from / tuples / just``.
+"""
+
+import zlib
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only sans hypothesis
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        """The ``strategies`` module surface the suite uses."""
+
+        @staticmethod
+        def floats(min_value=None, max_value=None, *, allow_nan=False,
+                   allow_infinity=False, width=64):
+            lo = 0.0 if min_value is None else float(min_value)
+            hi = 1.0 if max_value is None else float(max_value)
+
+            def draw(rng):
+                if rng.random() < 0.15:  # boundary bias: edges + midpoint
+                    return float(rng.choice([lo, hi, 0.5 * (lo + hi)]))
+                return float(rng.uniform(lo, hi))
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            lo = 0 if min_value is None else int(min_value)
+            hi = 2 ** 16 if max_value is None else int(max_value)
+
+            def draw(rng):
+                if rng.random() < 0.15:
+                    return int(rng.choice([lo, hi]))
+                return int(rng.integers(lo, hi + 1))
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+    st = _St()
+
+    def settings(*args, max_examples=100, **_ignored):
+        """Records max_examples on the test fn; everything else (deadline,
+        derandomize, suppress_health_check, ...) has no shim equivalent."""
+        if args and callable(args[0]):  # bare @settings
+            return args[0]
+
+        def apply(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return apply
+
+    def given(*strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*fargs, **fkwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples", 100))
+                base = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode())
+                for i in range(n):
+                    rng = np.random.default_rng((base, i))
+                    drawn = [s.example(rng) for s in strategies]
+                    try:
+                        fn(*fargs, *drawn, **fkwargs)
+                    except Exception as exc:
+                        note = (f"shim falsifying example "
+                                f"#{i}/{n}: {drawn!r}")
+                        if hasattr(exc, "add_note"):
+                            exc.add_note(note)
+                        raise
+
+            # pytest must not mistake the property's drawn parameters for
+            # fixtures: hide the wrapped signature (hypothesis does the same)
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return decorate

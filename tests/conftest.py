@@ -1,7 +1,24 @@
-"""Shared test fixtures.
+"""Shared test fixtures + the batched-engine differential harness helpers.
 
 NOTE: no XLA_FLAGS here — smoke tests and benches must see the real (single)
 CPU device; only launch/dryrun.py forces 512 placeholder devices.
+
+Skip audit (every remaining tier-1 skip, with its justification):
+
+* ``test_moe.py`` device-count skips (3x "needs 2 devices" at
+  test_moe_matches_dense_reference, 2x "needs more devices" at
+  test_token_routed_matches_dense_reference) — these exercise real 2-device
+  expert-parallel meshes; the CI container exposes a single CPU device and
+  faking devices via XLA_FLAGS here would break the smoke/bench requirement
+  above. They run on any multi-device host.
+* ``slow``-marked tests (10^4-member tail smokes) are deselected unless
+  ``--runslow`` is passed — the same tail is PASS-gated on every merge via
+  ``benchmarks/batched_engine.py`` in tools/smoke.sh.
+
+The four former ``pytest.importorskip("hypothesis")`` module skips
+(test_policy/test_simulator/test_roofline/test_sharding) are gone: they now
+import ``tests/_hypothesis_compat.py``, which falls back to a seeded-RNG
+property replayer when hypothesis isn't installed.
 """
 
 import os
@@ -10,9 +27,31 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import numpy as np
 import pytest
 
 from repro.launch.mesh import make_local_mesh
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="run slow-marked tests (10^4-member tail smokes)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running dense-tail test; needs --runslow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(
+        reason="slow dense-tail test: pass --runslow (benchmarks/"
+               "batched_engine.py gates the same tail every merge)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
 
 
 @pytest.fixture(scope="session")
@@ -44,3 +83,79 @@ def make_batch(cfg, B, S, seed=0):
         batch["targets"] = jnp.asarray(
             rng.integers(0, cfg.vocab_size, batch["tokens"].shape), jnp.int32)
     return batch
+
+
+# ---------------------------------------------------------------------------
+# batched-engine differential harness (DESIGN.md §15)
+#
+# Shared by tests/test_batched_parity.py (and importable from any module as
+# ``from conftest import ...``): build a randomized scenario, lower it once,
+# run the numpy tick oracle and the jax device program on the *same*
+# TickModel, and assert the oracle contract — brake-tick sets bit-identical,
+# power series within 1e-6 relative, statistics matching.
+# ---------------------------------------------------------------------------
+
+PARITY_GENERATORS = ("diurnal", "bursty", "colocated", "failover-surge",
+                     "rack-incident", "nighttime")
+PARITY_POWER_RTOL = 1e-6  # ISSUE-9 oracle contract bound (measured ~1e-15)
+
+
+def parity_scenario(*, generator="diurnal", n_rows=2, occ_peak=0.9,
+                    duration_s=2 * 3600.0, policy=None, hierarchy=None,
+                    faults=None, power_scale=1.08, n_provisioned=20,
+                    added_frac=0.30):
+    """One randomized-family scenario for the differential harness. Small
+    fleets + short horizons keep a property example < 100 ms while still
+    exercising T1/T2 caps (and brakes at high ``occ_peak``/``power_scale``)."""
+    from repro.experiments.scenario import FleetSpec, Scenario, TrafficSpec
+    import repro.provisioning  # noqa: F401  (registers generator families)
+
+    sc = Scenario(
+        name=f"parity-{generator}", duration_s=float(duration_s),
+        fleet=FleetSpec(n_provisioned=n_provisioned, added_frac=added_frac,
+                        n_rows=n_rows, rows_per_rack=max(1, n_rows // 2)),
+        traffic=TrafficSpec(occ_peak=float(occ_peak), generator=generator),
+        budget="nominal", power_scale=float(power_scale),
+        hierarchy=hierarchy, compare_to_reference=False)
+    if policy is not None:
+        sc = sc.with_policy(policy)
+    if faults is not None:
+        sc = sc.with_faults(faults)
+    return sc
+
+
+def run_both_engines(scenario, *, n_seeds=3, seed0=1000, keep_series=True):
+    """Lower once, run the numpy tick oracle + the jax engine on the same
+    TickModel. Returns (model, oracle_run, jax_run)."""
+    from repro.provisioning.batched import lower_ensemble, run_tick_model
+    from repro.provisioning.montecarlo import EnsembleSpec
+
+    model, members, _ = lower_ensemble(
+        EnsembleSpec(scenario, n_seeds=n_seeds, seed0=seed0))
+    oracle = run_tick_model(model, members, engine="numpy",
+                            keep_series=keep_series)
+    jaxed = run_tick_model(model, members, engine="jax",
+                           keep_series=keep_series)
+    return model, oracle, jaxed
+
+
+def assert_engine_parity(oracle, jaxed, *, rtol=PARITY_POWER_RTOL):
+    """The ISSUE-9 oracle contract, asserted in one place."""
+    # brake-tick sets are BIT-identical: same (member, tick, row) triples
+    assert np.array_equal(oracle.brake_fire, jaxed.brake_fire), (
+        "brake-tick sets differ between engines")
+    np.testing.assert_array_equal(oracle.n_brakes, jaxed.n_brakes)
+    # power series within rtol relative error
+    for name in ("total_frac", "row_w", "node_w"):
+        a, b = getattr(oracle, name), getattr(jaxed, name)
+        assert (a is None) == (b is None), f"{name} presence differs"
+        if a is not None:
+            np.testing.assert_allclose(b, a, rtol=rtol, atol=0.0,
+                                       err_msg=f"{name} outside {rtol} rel")
+    np.testing.assert_allclose(jaxed.peak_frac, oracle.peak_frac, rtol=rtol)
+    np.testing.assert_allclose(jaxed.mean_frac, oracle.mean_frac, rtol=rtol)
+    # SLO-impact decimation buffers: absolute tolerance (impacts cross zero)
+    np.testing.assert_allclose(jaxed.impacts_hp, oracle.impacts_hp,
+                               rtol=rtol, atol=1e-9)
+    np.testing.assert_allclose(jaxed.impacts_lp, oracle.impacts_lp,
+                               rtol=rtol, atol=1e-9)

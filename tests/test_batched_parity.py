@@ -1,0 +1,286 @@
+"""Differential-testing oracle harness for the batched ensemble engine.
+
+DESIGN.md §15: the jax jit/vmap/`lax.scan` device program in
+``provisioning/batched.py`` must reproduce the numpy tick oracle (which
+drives the *real* ``PolcaPolicy``/``PredictivePolcaPolicy`` objects) exactly
+— brake-tick sets bit-identical, power series within 1e-6 relative error,
+planner decisions identical. Scenarios are property-sampled across the
+generator family x hierarchy shape x policy x fault timeline axes; the
+shared helpers live in ``tests/conftest.py``.
+
+Durations are deliberately short (0.5 h = 900 ticks) so each drawn example
+stays fast while still crossing T1/T2 and (at high ``power_scale``) the
+brake threshold; every example still runs the full two-engine round trip.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st  # real hypothesis in CI
+from conftest import (
+    PARITY_GENERATORS,
+    PARITY_POWER_RTOL,
+    assert_engine_parity,
+    parity_scenario,
+    run_both_engines,
+)
+
+from repro.chaos.faults import FaultEvent, FaultSpec
+from repro.experiments.scenario import HierarchySpec
+from repro.provisioning.batched import (
+    lower_ensemble,
+    run_batched_ensemble,
+    run_tick_model,
+)
+from repro.provisioning.montecarlo import EnsembleSpec, run_ensemble
+from repro.provisioning.planner import RiskConstraints, plan_capacity
+
+HALF_HOUR = 1800.0
+
+generators = st.sampled_from(PARITY_GENERATORS)
+occ_hot = st.floats(min_value=0.85, max_value=0.99)
+scales_hot = st.floats(min_value=1.05, max_value=1.30)
+seeds = st.integers(min_value=0, max_value=10_000)
+
+
+# ---------------------------------------------------------------------------
+# the oracle contract, property-sampled across scenario axes
+# ---------------------------------------------------------------------------
+
+@given(generators, occ_hot, scales_hot, seeds)
+@settings(max_examples=6, deadline=None)
+def test_brake_set_equality_across_generators(gen, occ, scale, seed0):
+    """Brake-tick sets are BIT-identical for every generator family."""
+    sc = parity_scenario(generator=gen, occ_peak=occ, power_scale=scale,
+                         duration_s=HALF_HOUR)
+    _, oracle, jaxed = run_both_engines(sc, n_seeds=2, seed0=seed0)
+    assert np.array_equal(oracle.brake_fire, jaxed.brake_fire)
+    np.testing.assert_array_equal(oracle.n_brakes, jaxed.n_brakes)
+
+
+@given(generators, occ_hot, seeds)
+@settings(max_examples=6, deadline=None)
+def test_power_series_within_tolerance(gen, occ, seed0):
+    """Full power matrices (total, per-row) within 1e-6 relative error."""
+    sc = parity_scenario(generator=gen, occ_peak=occ, duration_s=HALF_HOUR)
+    _, oracle, jaxed = run_both_engines(sc, n_seeds=2, seed0=seed0)
+    np.testing.assert_allclose(jaxed.total_frac, oracle.total_frac,
+                               rtol=PARITY_POWER_RTOL, atol=0.0)
+    np.testing.assert_allclose(jaxed.row_w, oracle.row_w,
+                               rtol=PARITY_POWER_RTOL, atol=0.0)
+
+
+@given(generators, occ_hot, scales_hot)
+@settings(max_examples=4, deadline=None)
+def test_full_contract_parity(gen, occ, scale):
+    """The whole oracle contract in one sweep (peaks, means, SLO impacts)."""
+    sc = parity_scenario(generator=gen, occ_peak=occ, power_scale=scale,
+                         duration_s=HALF_HOUR)
+    _, oracle, jaxed = run_both_engines(sc, n_seeds=2)
+    assert_engine_parity(oracle, jaxed)
+
+
+@given(generators, occ_hot, scales_hot, seeds)
+@settings(max_examples=4, deadline=None)
+def test_predictive_policy_parity(gen, occ, scale, seed0):
+    """PredictivePolcaPolicy (EWMA window + 40 s OOB slope extrapolation +
+    informed escalation) carried in scan state matches the real policy."""
+    sc = parity_scenario(generator=gen, occ_peak=occ, power_scale=scale,
+                         duration_s=HALF_HOUR, policy="polca-predictive")
+    _, oracle, jaxed = run_both_engines(sc, n_seeds=2, seed0=seed0)
+    assert_engine_parity(oracle, jaxed)
+
+
+@given(st.sampled_from([(2, 2), (2, 3), (3, 2)]), generators, seeds)
+@settings(max_examples=4, deadline=None)
+def test_hierarchy_node_fold_parity(shape, gen, seed0):
+    """Hierarchy folds (segment-sum matmuls over the node matrix) match the
+    oracle, and the site fold conserves the row total on both engines."""
+    n_rows = shape[0] * shape[1]
+    sc = parity_scenario(generator=gen, n_rows=n_rows, occ_peak=0.93,
+                         duration_s=HALF_HOUR,
+                         hierarchy=HierarchySpec(shape=shape,
+                                                 budget_fracs={"0": 0.85}))
+    model, oracle, jaxed = run_both_engines(sc, n_seeds=2, seed0=seed0)
+    assert_engine_parity(oracle, jaxed)
+    site = model.node_names.index("site")
+    for run in (oracle, jaxed):
+        np.testing.assert_allclose(run.node_w[:, :, site],
+                                   run.row_w.sum(axis=2), rtol=1e-9)
+
+
+@given(st.floats(min_value=0.5, max_value=0.9),
+       st.integers(min_value=200, max_value=1100),
+       st.booleans(), seeds)
+@settings(max_examples=4, deadline=None)
+def test_fault_timeline_parity(factor, t_fault, ramp, seed0):
+    """Random fault timelines (interior derate with/without ramp, row
+    crash/revive, site demand response) lower identically on both engines."""
+    faults = FaultSpec((
+        FaultEvent("node-derate", t=float(t_fault), node="pdu1",
+                   factor=factor, until=float(t_fault + 600),
+                   ramp_s=120.0 if ramp else 0.0),
+        FaultEvent("row-crash", t=300.0, row=1),
+        FaultEvent("row-revive", t=900.0, row=1),
+        FaultEvent("site-demand-response", t=1200.0, factor=0.9,
+                   until=1600.0),
+    ))
+    sc = parity_scenario(n_rows=4, occ_peak=0.95, duration_s=HALF_HOUR,
+                         hierarchy=HierarchySpec(shape=(2, 2)), faults=faults)
+    _, oracle, jaxed = run_both_engines(sc, n_seeds=2, seed0=seed0)
+    assert_engine_parity(oracle, jaxed)
+
+
+# ---------------------------------------------------------------------------
+# determinism + invariance properties
+# ---------------------------------------------------------------------------
+
+@given(generators, seeds)
+@settings(max_examples=4, deadline=None)
+def test_seed_determinism(gen, seed0):
+    """Same spec -> bit-identical lowering and bit-identical jax results on
+    repeat runs; a different seed0 changes the sampled occupancy."""
+    sc = parity_scenario(generator=gen, duration_s=HALF_HOUR)
+    spec = EnsembleSpec(sc, n_seeds=2, seed0=seed0)
+    m1, mem1, _ = lower_ensemble(spec)
+    m2, mem2, _ = lower_ensemble(spec)
+    np.testing.assert_array_equal(m1.occ60, m2.occ60)
+    np.testing.assert_array_equal(m1.alive, m2.alive)
+    np.testing.assert_array_equal(m1.budget_scale, m2.budget_scale)
+    r1 = run_tick_model(m1, mem1, engine="jax")
+    r2 = run_tick_model(m2, mem2, engine="jax")
+    np.testing.assert_array_equal(r1.total_frac, r2.total_frac)
+    np.testing.assert_array_equal(r1.brake_fire, r2.brake_fire)
+    m3, _, _ = lower_ensemble(EnsembleSpec(sc, n_seeds=2, seed0=seed0 + 77))
+    assert not np.array_equal(m1.occ60, m3.occ60)
+
+
+@given(generators, seeds)
+@settings(max_examples=3, deadline=None)
+def test_member_batch_invariance(gen, seed0):
+    """vmap independence: member m's series is bit-identical whether it runs
+    in a batch of 4 or alone (no cross-member leakage in the device
+    program)."""
+    sc = parity_scenario(generator=gen, occ_peak=0.95, duration_s=HALF_HOUR)
+    model, members, _ = lower_ensemble(EnsembleSpec(sc, n_seeds=4,
+                                                    seed0=seed0))
+    full = run_tick_model(model, members, engine="jax")
+    for m in (0, 3):
+        import dataclasses
+        solo_model = dataclasses.replace(model, n_members=1,
+                                         occ60=model.occ60[m:m + 1],
+                                         seeds=model.seeds[m:m + 1])
+        solo = run_tick_model(solo_model, [members[m]], engine="jax")
+        np.testing.assert_array_equal(solo.total_frac[0], full.total_frac[m])
+        np.testing.assert_array_equal(solo.brake_fire[0], full.brake_fire[m])
+        np.testing.assert_array_equal(solo.impacts_lp[0], full.impacts_lp[m])
+
+
+def test_lowering_rejects_routed_and_short_scenarios():
+    from repro.experiments.scenario import RoutingSpec
+
+    sc = parity_scenario(duration_s=HALF_HOUR)
+    routed = sc.with_(routing=RoutingSpec(router="round-robin"))
+    with pytest.raises(ValueError, match="engine='numpy'"):
+        lower_ensemble(EnsembleSpec(routed, n_seeds=2))
+    with pytest.raises(ValueError, match="duration"):
+        lower_ensemble(EnsembleSpec(sc.with_(duration_s=60.0), n_seeds=2))
+
+
+# ---------------------------------------------------------------------------
+# EnsembleResult statistic parity + planner decisions
+# ---------------------------------------------------------------------------
+
+@given(generators, occ_hot, seeds)
+@settings(max_examples=3, deadline=None)
+def test_ensemble_result_statistic_parity(gen, occ, seed0):
+    """run_ensemble(engine='jax') and the tick oracle produce matching
+    EnsembleResult statistics end to end (summary dict, CDFs, CVaRs)."""
+    sc = parity_scenario(generator=gen, occ_peak=occ, duration_s=HALF_HOUR)
+    spec = EnsembleSpec(sc, n_seeds=4, seed0=seed0)
+    a = run_ensemble(spec, engine="jax")
+    b = run_ensemble(spec, engine="batched-numpy")
+    np.testing.assert_array_equal(a.brake_counts, b.brake_counts)
+    np.testing.assert_allclose(a.peak_fracs, b.peak_fracs,
+                               rtol=PARITY_POWER_RTOL)
+    np.testing.assert_allclose(a.mean_fracs, b.mean_fracs,
+                               rtol=PARITY_POWER_RTOL)
+    np.testing.assert_allclose(a.power_frac, b.power_frac,
+                               rtol=PARITY_POWER_RTOL)
+    sa, sb = a.summary(), b.summary()
+    assert sa.keys() == sb.keys()
+    for k in sa:
+        np.testing.assert_allclose(sa[k], sb[k], rtol=1e-6, atol=1e-9,
+                                   err_msg=f"summary[{k}] differs")
+    for alpha in (0.0, 0.5, 0.75):
+        np.testing.assert_allclose(a.brake_cvar(alpha), b.brake_cvar(alpha),
+                                   rtol=1e-9, atol=0.0)
+        np.testing.assert_allclose(a.slo_cvar("low", alpha),
+                                   b.slo_cvar("low", alpha),
+                                   rtol=1e-6, atol=1e-12)
+
+
+def test_planner_decisions_identical_across_engines():
+    """plan_capacity lands on the same safe_added_servers with the same
+    per-probe feasibility verdicts on both batched engines."""
+    sc = parity_scenario(occ_peak=0.95, duration_s=HALF_HOUR,
+                         n_provisioned=10, added_frac=0.0)
+    cons = RiskConstraints(max_brakes=0, max_slo_violation_prob=1.0,
+                           slo_cvar_alpha=0.5, max_slo_cvar=2.0,
+                           slo_cvar_priority="low")
+    plans = {eng: plan_capacity(sc, n_seeds=4, seed0=42, engine=eng,
+                                constraints=cons, max_added_frac=0.4)
+             for eng in ("jax", "batched-numpy")}
+    a, b = plans["jax"], plans["batched-numpy"]
+    assert a.safe_added_servers == b.safe_added_servers
+    assert [(p.added_servers, p.feasible) for p in a.probes] == \
+        [(p.added_servers, p.feasible) for p in b.probes]
+    for pa, pb in zip(a.probes, b.probes):
+        np.testing.assert_allclose(pa.brake_prob, pb.brake_prob)
+        np.testing.assert_allclose(pa.slo_cvar, pb.slo_cvar, rtol=1e-6)
+
+
+def test_brakes_actually_fire_and_match():
+    """The harness demonstrably covers the brake path: at power_scale=1.30
+    the fleet must brake, and the brake-tick sets still match bit-for-bit."""
+    sc = parity_scenario(occ_peak=0.99, power_scale=1.30,
+                         duration_s=HALF_HOUR)
+    _, oracle, jaxed = run_both_engines(sc, n_seeds=2)
+    assert oracle.n_brakes.sum() > 0, "scenario failed to exercise brakes"
+    assert np.array_equal(oracle.brake_fire, jaxed.brake_fire)
+    assert_engine_parity(oracle, jaxed)
+
+
+def test_quiet_scenario_is_quiet_on_both_engines():
+    """Low occupancy: no brakes, no caps biting, ~zero SLO impact — and the
+    engines agree exactly."""
+    sc = parity_scenario(occ_peak=0.35, power_scale=0.9,
+                         duration_s=HALF_HOUR)
+    _, oracle, jaxed = run_both_engines(sc, n_seeds=2)
+    for run in (oracle, jaxed):
+        assert run.n_brakes.sum() == 0
+        assert run.peak_frac.max() < 1.0
+        assert np.abs(run.impacts_hp).max() < 1e-9
+    assert_engine_parity(oracle, jaxed)
+
+
+# ---------------------------------------------------------------------------
+# dense tails
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_dense_tail_10k_members():
+    """10^4-member tail smoke: the jax engine completes a full ensemble in
+    one device program and its statistics are sane. (The same tail is
+    PASS-gated with throughput in benchmarks/batched_engine.py.)"""
+    sc = parity_scenario(occ_peak=0.97, power_scale=1.15,
+                         duration_s=HALF_HOUR)
+    res = run_batched_ensemble(EnsembleSpec(sc, n_seeds=10_000, seed0=1),
+                               engine="jax", keep_series=False)
+    assert res.n_members == 10_000
+    assert res.power_frac.size == 0  # series dropped above the cell limit
+    assert np.isfinite(res.peak_fracs).all()
+    assert 0.0 <= res.brake_prob() <= 1.0
+    assert res.brake_cvar(0.999) >= res.brake_cvar(0.9) >= res.brake_cvar(0.0)
+    tail = res.slo_cvar("low", 0.999)
+    assert np.isfinite(tail)

@@ -25,6 +25,7 @@ from repro.provisioning import (
     compose_rows,
     compose_site,
     plan_capacity,
+    resolve_ensemble_budget,
     run_ensemble,
     run_ensemble_grid,
 )
@@ -246,6 +247,94 @@ def test_planner_reports_infeasible_at_zero():
     plan = plan_capacity(base, n_seeds=2, seed0=810, n_workers=1,
                          budget_w=1000.0)
     assert plan.safe_added_servers == 0 and not plan.feasible_at_zero
+
+
+# ------------------------------------------------------------- cvar gate
+HOT = SMALL.with_(power_scale=1.15, traffic=TrafficSpec(occ_peak=0.95))
+
+
+def _dense_tail(n_seeds=64):
+    return run_ensemble(EnsembleSpec(HOT, n_seeds=n_seeds, seed0=5),
+                        engine="jax")
+
+
+def test_cvar_monotone_in_alpha():
+    """CVaR averages a shrinking worst-case tail, so it is nondecreasing in
+    alpha — on brake counts and on the SLO-impact tail alike."""
+    ens = _dense_tail()
+    alphas = [0.0, 0.25, 0.5, 0.75, 0.9, 0.95]
+    brake = [ens.brake_cvar(a) for a in alphas]
+    slo = [ens.slo_cvar("low", a) for a in alphas]
+    assert all(b2 >= b1 - 1e-12 for b1, b2 in zip(brake, brake[1:]))
+    assert all(s2 >= s1 - 1e-12 for s1, s2 in zip(slo, slo[1:]))
+    # alpha=0 degenerates to the plain mean
+    np.testing.assert_allclose(ens.brake_cvar(0.0),
+                               ens.brake_counts.mean(), rtol=1e-12)
+
+
+def test_cvar_degenerates_to_max_as_alpha_approaches_one():
+    """Once the (1 - alpha) tail holds <= 1 member, CVaR is the sample
+    max — the max-brake / worst-member statistic."""
+    ens = _dense_tail()
+    n = ens.n_members
+    alpha = 1.0 - 0.5 / n  # tail mass 0.5 member
+    np.testing.assert_allclose(ens.brake_cvar(alpha),
+                               float(ens.brake_counts.max()), rtol=0.0)
+    per_member = [float(np.percentile(m.stats.lp_impacts, 99.0))
+                  if len(m.stats.lp_impacts) else 0.0 for m in ens.members]
+    np.testing.assert_allclose(ens.slo_cvar("low", alpha), max(per_member),
+                               rtol=1e-12)
+    with pytest.raises(ValueError):
+        ens.brake_cvar(1.0)  # alpha must stay < 1
+
+
+def test_planner_cvar_gate_infeasible_at_zero_on_dense_tail():
+    """With a zero CVaR budget on a tail that has real LP capping impact,
+    the dense-jax plan is infeasible even at zero added servers — the gate
+    actually bites (other gates are opened wide so only CVaR can fail)."""
+    ens = _dense_tail(n_seeds=16)
+    assert ens.slo_cvar("low", 0.9) > 0.0  # the tail is genuinely loaded
+    base = HOT.with_fleet(added_frac=0.0)
+    # an envelope 20% under nominal: even the provisioned fleet caps LP
+    tight = 0.8 * resolve_ensemble_budget(base)
+    cons = RiskConstraints(max_brakes=10 ** 9, max_slo_violation_prob=1.0,
+                           slo_cvar_alpha=0.9, max_slo_cvar=0.0,
+                           slo_cvar_priority="low")
+    plan = plan_capacity(base, n_seeds=16, seed0=5, engine="jax",
+                         budget_w=tight, constraints=cons)
+    assert plan.safe_added_servers == 0 and not plan.feasible_at_zero
+    assert all(p.slo_cvar is not None and p.slo_cvar > 0.0
+               for p in plan.probes)
+    # loosening the CVaR budget past the observed tail re-admits the fleet
+    loose = RiskConstraints(max_brakes=10 ** 9, max_slo_violation_prob=1.0,
+                            slo_cvar_alpha=0.9, max_slo_cvar=1e9,
+                            slo_cvar_priority="low")
+    plan2 = plan_capacity(base, n_seeds=16, seed0=5, engine="jax",
+                          budget_w=tight, constraints=loose)
+    assert plan2.feasible_at_zero
+    assert plan2.safe_added_servers >= plan.safe_added_servers
+
+
+def test_planner_cvar_requires_enough_seeds():
+    """alpha's tail must hold >= 1 full member: n_seeds >= 1 / (1 - alpha)."""
+    with pytest.raises(ValueError, match="n_seeds >= 20"):
+        plan_capacity(HOT, n_seeds=8, engine="jax",
+                      constraints=RiskConstraints(slo_cvar_alpha=0.95))
+
+
+def test_planner_survive_requires_numpy_engine():
+    """The survivability gate rides the routed FleetSimulator, which the
+    batched tick engines reject."""
+    from repro.chaos.faults import FaultEvent, FaultSpec
+    from repro.experiments.scenario import RoutingSpec
+
+    routed = HOT.with_(routing=RoutingSpec(router="round-robin"))
+    survive = FaultSpec(
+        (FaultEvent("site-demand-response", t=600.0, factor=0.9,
+                    until=1200.0),))
+    with pytest.raises(ValueError, match="engine='numpy'"):
+        plan_capacity(routed, n_seeds=4, engine="jax",
+                      constraints=RiskConstraints(survive=survive))
 
 
 # ---------------------------------------------------------------- traces

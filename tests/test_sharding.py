@@ -2,8 +2,7 @@
 
 import jax
 import pytest
-pytest.importorskip("hypothesis")  # see requirements-dev.txt
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # real hypothesis in CI
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.mesh import make_local_mesh

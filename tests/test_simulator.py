@@ -2,8 +2,7 @@
 
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # see requirements-dev.txt
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # real hypothesis in CI
 
 from repro.core.policy import NoCap, PolcaPolicy
 from repro.core.power_model import A100, ServerPower

@@ -35,6 +35,9 @@ python -m benchmarks.run --quick --only observability
 echo "== alerting quick benchmark =="
 python -m benchmarks.run --quick --only alerting
 
+echo "== batched-engine quick benchmark (oracle parity + 10^4-member tail) =="
+python -m benchmarks.run --quick --only batched_engine
+
 echo "== artifact pipeline (instrumented run -> manifest/metrics/events/incidents/report) =="
 ARTIFACTS_DIR="${ARTIFACTS_DIR:-out/smoke-artifacts}"
 rm -rf "$ARTIFACTS_DIR"

@@ -37,6 +37,34 @@ else:
     jax.set_mesh = set_mesh
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """Version-compatible ``jax.shard_map``.
+
+    Recent jax exposes ``jax.shard_map`` with the ``check_vma`` kwarg; older
+    releases only have ``jax.experimental.shard_map.shard_map`` whose
+    equivalent knob is ``check_rep``. Callers that disable varying-manual
+    axis checking (the batched engine's replicated-consts layout trips it)
+    work on both."""
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def data_mesh(data: int = 0):
+    """1-D ``("data",)`` mesh for member-axis sharding (batched engine).
+
+    ``data=0`` spans every visible device. With
+    ``--xla_force_host_platform_device_count=8`` (pinned in
+    ``tests/conftest.py``) this exercises the real sharded path on CPU CI."""
+    if data <= 0:
+        data = len(jax.devices())
+    return jax.make_mesh((data,), ("data",))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -9,9 +9,12 @@ Importing this package registers the scenario-family trace generators
 from repro.provisioning.batched import (
     BatchedRun,
     TickModel,
+    jax_trace_count,
     lower_ensemble,
     run_batched_ensemble,
+    run_batched_grid,
     run_tick_model,
+    run_tick_models,
 )
 from repro.provisioning.ensembles import (
     GENERATOR_FAMILY,
@@ -54,13 +57,17 @@ __all__ = [
     "TickModel",
     "compose_rows",
     "compose_site",
+    "jax_trace_count",
     "lower_ensemble",
     "plan_capacity",
     "plan_controller_comparison",
     "plan_scenarios",
     "resolve_ensemble_budget",
     "run_batched_ensemble",
+    "run_batched_grid",
     "run_ensemble",
     "run_ensemble_grid",
     "run_ensemble_sequential",
+    "run_tick_model",
+    "run_tick_models",
 ]

@@ -16,17 +16,32 @@ program (DESIGN.md §15):
   lowered to per-tick budget scales and row-alive masks, and the
   ``PowerHierarchy`` node matrix for segment-sum folds.
 
-* **Two backends, one contract** — ``engine="jax"`` runs the tick advance as
-  a ``lax.scan`` over time ``vmap``-ed over members, with the
+* **Three backends, one contract** — ``engine="jax"`` runs the tick advance
+  as a ``lax.scan`` over time ``vmap``-ed over members, with the
   :class:`~repro.core.policy.PolcaPolicy` /
   :class:`~repro.core.policy.PredictivePolcaPolicy` observe step (windowed
   least-squares slope over the 40 s OOB horizon) carried in scan state as a
-  vectorized boolean state machine. ``engine="numpy"`` is the differential
-  **oracle**: the identical tick/ring contract driven by the *real* policy
-  objects through :class:`~repro.core.telemetry.Telemetry`, one instance per
-  (member, row) — so the vectorized state machine is checked against the
-  genuine Algorithm-1 implementation, not a reimplementation of itself
-  (``tests/test_batched_parity.py``).
+  vectorized boolean state machine; the latch math lives in
+  :func:`repro.kernels.tick.polca_latch_step`, shared with the Pallas
+  backend. ``engine="pallas"`` runs the non-predictive tick inner loop
+  (power fold + latch/ring update) as the :func:`repro.kernels.ops.
+  polca_tick` kernel, interpret-mode on CPU. ``engine="numpy"`` is the
+  differential **oracle**: the identical tick/ring contract driven by the
+  *real* policy objects through :class:`~repro.core.telemetry.Telemetry`,
+  one instance per (member, row) — so the vectorized state machine is
+  checked against the genuine Algorithm-1 implementation, not a
+  reimplementation of itself (``tests/test_batched_parity.py``).
+
+* **Grids, shards, chunks (DESIGN.md §16)** — per-scenario scalars are
+  *traced* operands (:class:`_Consts`), not compile-time constants, so one
+  compiled program serves every scenario sharing tick geometry:
+  :func:`run_batched_grid` stacks M lowered models and ``vmap``s the
+  scenario axis on top of the member axis (one jit call per geometry
+  bucket), and a ``plan_capacity`` bisection stops recompiling per probe
+  (``jax_trace_count`` is the regression hook). The member axis optionally
+  shards over a ``("data",)`` mesh (``launch.mesh.data_mesh`` +
+  ``shard_map``) and/or advances in ``member_chunk``-sized ``lax.scan``
+  blocks, bounding live memory so 10^5-10^6-member tails fit on one host.
 
 * **Actuation ring** — out-of-band cap commands apply ``ceil(40/2)=20``
   ticks after issue and powerbrakes ``ceil(5/2)=3`` ticks after, modeled as
@@ -76,6 +91,10 @@ from repro.provisioning.montecarlo import (
 _SERIES_CELL_LIMIT = 4_000_000
 # per-member SLO-impact samples are decimated onto at most this many slots
 _IMPACT_SLOTS = 256
+# member_chunk=None (auto) scans blocks of about this many members (counted
+# across the whole scenario axis): the ~2 KB/member scan carry then stays
+# cache-resident, which beats a flat vmap well before memory binds
+_AUTO_CHUNK_MEMBERS = 512
 _JITTER_SALT = 9173  # member-occupancy jitter stream, disjoint from arrivals
 
 
@@ -157,7 +176,9 @@ class BatchedRun:
 
     engine: str
     model: TickModel
-    brake_fire: np.ndarray = field(repr=False)  # [N, T, R] bool
+    # [N, T, R] bool; None when the run dropped the per-tick plane
+    # (keep_brake_fire=False — dense tails keep only the n_brakes counts)
+    brake_fire: Optional[np.ndarray] = field(repr=False)
     n_brakes: np.ndarray = field(repr=False)  # [N, R] int
     peak_frac: np.ndarray = field(repr=False)  # [N]
     mean_frac: np.ndarray = field(repr=False)  # [N]
@@ -170,6 +191,10 @@ class BatchedRun:
     def brake_ticks(self) -> np.ndarray:
         """Sorted (member, tick, row) index triples of every brake firing —
         the bit-compared set of the oracle contract."""
+        if self.brake_fire is None:
+            raise ValueError(
+                "this run dropped the per-tick brake plane "
+                "(keep_brake_fire=False); only n_brakes counts survive")
         return np.argwhere(self.brake_fire)
 
     def member_stats(self, m: int) -> LatencyStats:
@@ -206,6 +231,9 @@ def _policy_constants(sc: Scenario) -> Dict[str, object]:
     )
 
 
+_POWER_CONSTS_CACHE: Dict[tuple, Dict[str, float]] = {}
+
+
 def _power_constants(sc: Scenario) -> Dict[str, float]:
     """Closed-form power/SLO coefficients over the Table-4 workload mix.
 
@@ -214,7 +242,18 @@ def _power_constants(sc: Scenario) -> Dict[str, float]:
     prefill/decode-time-weighted roofline utilization — exactly
     ``DevicePower.power`` evaluated at the class's two
     :class:`~repro.core.workload.PhasePoint` operating points. Classes then
-    collapse into one LP and one HP coefficient via share x priority mix."""
+    collapse into one LP and one HP coefficient via share x priority mix.
+
+    Per-server coefficients are independent of fleet *size*, so the result
+    is cached on the (model, device, devices/server, mix) key — a
+    ``plan_capacity`` bisection re-lowers per probe (the occupancy jitter
+    scales with ``n_servers``, so member traces legitimately change) but
+    never recomputes this plane."""
+    key = (sc.fleet.model, sc.fleet.device, sc.fleet.n_devices_per_server,
+           sc.traffic.priority_mix_override)
+    hit = _POWER_CONSTS_CACHE.get(key)
+    if hit is not None:
+        return hit
     wls, shares = build_workloads(sc)
     server = sc.fleet.server()
     dev = server.device
@@ -246,12 +285,23 @@ def _power_constants(sc: Scenario) -> Dict[str, float]:
     out = dict(p0_srv_w=float(server.idle_power), k_lp_w=float(k_lp),
                k_hp_w=float(k_hp), lp_share=float(lp_share),
                gamma=float(dev.gamma))
-    for prio, key in (("high", "hp"), ("low", "lp")):
+    for prio, pkey in (("high", "hp"), ("low", "lp")):
         has = wgt_tot[prio] > 0.0
-        out[f"has_{key}"] = bool(has)
-        out[f"a_{key}"] = float(a_num[prio] / wgt_tot[prio]) if has else 0.0
-        out[f"svc_{key}"] = float(svc_num[prio] / wgt_tot[prio]) if has else 1.0
+        out[f"has_{pkey}"] = bool(has)
+        out[f"a_{pkey}"] = float(a_num[prio] / wgt_tot[prio]) if has else 0.0
+        out[f"svc_{pkey}"] = float(svc_num[prio] / wgt_tot[prio]) if has else 1.0
+    _POWER_CONSTS_CACHE[key] = out
     return out
+
+
+# base generator curves are independent of fleet size (only the CLT jitter
+# scales with n_servers), so a plan_capacity bisection — which re-lowers per
+# probe because fleets differ — reuses them across every probe
+_BASE_OCC_CACHE: Dict[tuple, np.ndarray] = {}
+# sized for a 4-generator x 10^3-seed x 2-row grid with headroom; entries
+# are short 60 s-grid curves (a few KB each), so the cap is ~100 MB worst
+# case and far smaller in practice
+_BASE_OCC_CACHE_MAX = 16384
 
 
 def _member_occupancy(sc: Scenario, seeds: Sequence[int], t60: np.ndarray,
@@ -262,12 +312,23 @@ def _member_occupancy(sc: Scenario, seeds: Sequence[int], t60: np.ndarray,
     noise of the DES — without it the diurnal family (which deliberately
     ignores the member seed) would collapse every member onto one curve."""
     gen = get_occupancy_generator(sc.traffic.generator)
+    gkey = (sc.traffic.generator, len(t60),
+            float(t60[-1]) if len(t60) else 0.0,
+            float(sc.traffic.occ_peak), n_rows,
+            tuple(sorted((k, repr(v))
+                         for k, v in sc.traffic.gen_params.items())))
     occ = np.empty((len(seeds), n_rows, len(t60)), dtype=np.float64)
     for mi, seed in enumerate(seeds):
         for r in range(n_rows):
-            base = np.asarray(gen(t60, seed=int(seed), peak=sc.traffic.occ_peak,
-                                  n_rows=n_rows, row=r,
-                                  **sc.traffic.gen_params), dtype=np.float64)
+            ck = gkey + (int(seed), r)
+            base = _BASE_OCC_CACHE.get(ck)
+            if base is None:
+                base = np.asarray(
+                    gen(t60, seed=int(seed), peak=sc.traffic.occ_peak,
+                        n_rows=n_rows, row=r, **sc.traffic.gen_params),
+                    dtype=np.float64)
+                if len(_BASE_OCC_CACHE) < _BASE_OCC_CACHE_MAX:
+                    _BASE_OCC_CACHE[ck] = base
             rng = np.random.default_rng([int(seed), r, _JITTER_SALT])
             sigma = np.sqrt(np.clip(base * (1.0 - base), 0.0, None) / n_servers)
             occ[mi, r] = np.clip(base + rng.standard_normal(len(t60)) * sigma,
@@ -504,11 +565,20 @@ def _run_oracle(model: TickModel, members: List[Scenario],
 
 
 # ---------------------------------------------------------------------------
-# jax engine: lax.scan over ticks, vmap over members
+# jax engine: scenario-axis vmap over (member vmap / chunked scan) over a
+# lax.scan over ticks
 # ---------------------------------------------------------------------------
 
 class _JaxCfg(NamedTuple):
-    """Static (compile-time) shape/flag key for the jitted runner."""
+    """Static (compile-time) shape/flag key for the jitted runner.
+
+    Deliberately *only* shapes and branch flags: every scalar constant
+    (thresholds, power coefficients, ``n_servers`` — which changes per
+    ``plan_capacity`` probe) travels as a traced operand in :class:`_Consts`,
+    so one compiled program serves a whole probe bisection and every
+    scenario of a grid bucket. ``jax_trace_count()`` is the regression
+    hook asserting that."""
+
     T: int
     R: int
     D: int
@@ -520,59 +590,79 @@ class _JaxCfg(NamedTuple):
     esc: int
     predictive: bool
     keep_series: bool
+    keep_fire: bool
+    chunk: int  # member-block size for the inner lax.scan; 0 = plain vmap
 
 
-@lru_cache(maxsize=32)
-def _jax_runner(cfg: _JaxCfg):
+class _Consts(NamedTuple):
+    """Traced per-scenario constants of the tick program. Scalar leaves are
+    0-d (single scenario) or ``[M]`` (grid mode — the scenario-axis vmap
+    maps over the leading axis of every leaf); ``row_budget`` is ``[R]`` /
+    ``[M, R]``. Field names match :class:`repro.kernels.tick.TickConsts`
+    so the shared step math reads either."""
+
+    t1: object
+    t2: object
+    t1_buf: object
+    t2_buf: object
+    lp_t1: object
+    lp_t2: object
+    hp_t2: object
+    brake_freq: object
+    p0_srv_w: object
+    k_lp_w: object
+    k_hp_w: object
+    lp_share: object
+    gamma: object
+    n_servers: object
+    power_scale: object
+    dt: object
+    horizon: object
+    a_hp: object
+    a_lp: object
+    svc_hp: object
+    svc_lp: object
+    total_budget: object
+    row_budget: object
+
+
+_CONST_SCALARS = (
+    "t1", "t2", "t1_buf", "t2_buf", "lp_t1", "lp_t2", "hp_t2", "brake_freq",
+    "p0_srv_w", "k_lp_w", "k_hp_w", "lp_share", "gamma", "n_servers",
+    "power_scale", "dt", "horizon", "a_hp", "a_lp", "svc_hp", "svc_lp",
+    "total_budget")
+
+_MODEL_FIELD = dict(t1_buf="t1_buffer", t2_buf="t2_buffer",
+                    lp_t1="lp_freq_t1", lp_t2="lp_freq_t2",
+                    hp_t2="hp_freq_t2", horizon="horizon_s",
+                    total_budget="total_budget_w")
+
+
+def _model_const(model: TickModel, name: str) -> float:
+    return float(getattr(model, _MODEL_FIELD.get(name, name)))
+
+
+# every trace of the batched runner (== one XLA compile of one _JaxCfg +
+# operand-shape combination), appended at trace time
+_TRACE_EVENTS: List[_JaxCfg] = []
+
+
+def jax_trace_count() -> int:
+    """How many times this process has traced the batched jax runner.
+
+    Each trace is one XLA compilation; constants are operands, so only a
+    *new geometry* (fresh ``_JaxCfg`` or operand shapes) retraces. The
+    planner regression gate asserts a multi-probe bisection traces once."""
+    return len(_TRACE_EVENTS)
+
+
+@lru_cache(maxsize=64)
+def _jax_runner(cfg: _JaxCfg, mesh=None):
     import jax
     import jax.numpy as jnp
     from jax import lax
 
-    def polca_step(c, p_obs, p_raw, lp_frac, consts):
-        """One vectorized tick of PolcaPolicy.observe over R rows. Mirrors
-        core.policy line for line: the overload path sets every cap flag and
-        skips releases; cap/escalation branches run only out of overload;
-        releases read the *post-cap* flags, and the T1 release additionally
-        requires T2 to have just released or been clear."""
-        t1c, t2c, hpc, brk, t2s = c["t1c"], c["t2c"], c["hpc"], c["brk"], c["t2s"]
-        over = p_obs > 1.0
-        fire = over & ~brk
-        rel_brake = ~over & brk
-        if cfg.predictive:
-            informed = (t2c & ~hpc & (p_raw > consts["t2"])
-                        & (lp_frac < p_raw - consts["t2"]))
-            t2s = jnp.where(informed, cfg.esc, t2s)
-        hi2 = p_obs > consts["t2"]
-        cap_t2 = ~over & hi2 & ~t2c
-        esc_tick = ~over & hi2 & t2c & ~hpc
-        t2s = jnp.where(cap_t2, 0, jnp.where(esc_tick, t2s + 1, t2s))
-        cap_hp = esc_tick & (t2s >= cfg.esc)
-        cap_t1 = ~over & ~hi2 & (p_obs > consts["t1"]) & ~t1c
-        t2c_mid = t2c | over | cap_t2
-        t1c_mid = t1c | over | cap_t2 | cap_t1
-        hpc_mid = hpc | over | cap_hp
-        rel_t2 = ~over & t2c_mid & (p_obs < consts["t2"] - consts["t2_buf"])
-        t2c = t2c_mid & ~rel_t2
-        hpc = hpc_mid & ~rel_t2
-        rel_t1 = (~over & t1c_mid & ~t2c
-                  & (p_obs < consts["t1"] - consts["t1_buf"]))
-        t1c = t1c_mid & ~rel_t1
-        new = dict(c, t1c=t1c, t2c=t2c, hpc=hpc, brk=over, t2s=t2s,
-                   nbr=c["nbr"] + fire.astype(jnp.int32))
-        # command emission per frequency field, in the policy's cmd-list
-        # order (later overwrites earlier — the DES same-due-time rule)
-        nanv = jnp.full(p_obs.shape, jnp.nan)
-        lp_cmd = nanv
-        hp_cmd = nanv
-        lp_cmd = jnp.where(rel_brake, consts["lp_t2"], lp_cmd)
-        hp_cmd = jnp.where(rel_brake, consts["hp_t2"], hp_cmd)
-        lp_cmd = jnp.where(cap_t2, consts["lp_t2"], lp_cmd)
-        hp_cmd = jnp.where(cap_hp, consts["hp_t2"], hp_cmd)
-        lp_cmd = jnp.where(cap_t1, consts["lp_t1"], lp_cmd)
-        lp_cmd = jnp.where(rel_t2, consts["lp_t1"], lp_cmd)
-        hp_cmd = jnp.where(rel_t2, 1.0, hp_cmd)
-        lp_cmd = jnp.where(rel_t1, 1.0, lp_cmd)
-        return new, fire, lp_cmd, hp_cmd
+    from repro.kernels.tick import PolcaLatches, polca_latch_step
 
     def predict(c, t, p, consts):
         """PredictivePolcaPolicy._predict: windowed least-squares slope
@@ -599,11 +689,11 @@ def _jax_runner(cfg: _JaxCfg):
         den = jnp.sum(dt_ * dt_, axis=1)
         slope = num / jnp.where(den > 0.0, den, 1.0)
         p_ext = jnp.where((nn >= 3) & (den > 0.0),
-                          jnp.maximum(p, p + slope * consts["horizon"]), p)
+                          jnp.maximum(p, p + slope * consts.horizon), p)
         p_obs = jnp.where(p <= 1.0, jnp.minimum(p_ext, 1.0 - 1e-9), p_ext)
         return dict(c, hist_t=ht, hist_p=hp), p_obs
 
-    def run(scalars, occ60_all, consts, xs):
+    def run_scenario(occ60_all, consts, xs):
         T, R, D, S = cfg.T, cfg.R, cfg.D, cfg.S
 
         def step_for(occ60):
@@ -619,18 +709,24 @@ def _jax_runner(cfg: _JaxCfg):
                     c["ring"], jnp.full((R, 2), jnp.nan), slot, axis=1)
                 occ = ((occ60[:, ii] * (1.0 - iw) + occ60[:, ii + 1] * iw)
                        * alive)
-                rw = _row_power_w(scalars, occ, f_lp, f_hp, jnp)
-                frac = jnp.sum(rw) / consts["total_budget"]
-                tick_budget = consts["row_budget"] * bscale
+                rw = _row_power_w(consts, occ, f_lp, f_hp, jnp)
+                frac = jnp.sum(rw) / consts.total_budget
+                tick_budget = consts.row_budget * bscale
                 p_raw = rw / tick_budget
-                lp_frac = _lp_power_w(scalars, occ, f_lp, jnp) / tick_budget
+                lp_frac = _lp_power_w(consts, occ, f_lp, jnp) / tick_budget
                 c = dict(c, f_lp=f_lp, f_hp=f_hp, ring=ring, k=k)
                 if cfg.predictive:
                     c, p_obs = predict(c, t, p_raw, consts)
                 else:
                     p_obs = p_raw
-                c, fire, lp_cmd, hp_cmd = polca_step(c, p_obs, p_raw, lp_frac,
-                                                     consts)
+                lat = PolcaLatches(t1c=c["t1c"], t2c=c["t2c"], hpc=c["hpc"],
+                                   brk=c["brk"], t2s=c["t2s"])
+                lat, fire, lp_cmd, hp_cmd = polca_latch_step(
+                    lat, p_obs, p_raw, lp_frac, consts,
+                    esc=cfg.esc, predictive=cfg.predictive)
+                c = dict(c, t1c=lat.t1c, t2c=lat.t2c, hpc=lat.hpc,
+                         brk=lat.brk, t2s=lat.t2s,
+                         nbr=c["nbr"] + fire.astype(jnp.int32))
                 ring = c["ring"]
                 s_oob = (k + cfg.oob_ticks) % D
                 s_brk = (k + cfg.brake_ticks) % D
@@ -645,11 +741,11 @@ def _jax_runner(cfg: _JaxCfg):
                 brk_slot = lax.dynamic_index_in_dim(ring, s_brk, axis=1,
                                                     keepdims=False)
                 brk_val = jnp.where(fire[:, None],
-                                    jnp.full((R, 2), consts["brake_freq"]),
+                                    jnp.full((R, 2), consts.brake_freq),
                                     brk_slot)
                 ring = lax.dynamic_update_index_in_dim(ring, brk_val, s_brk,
                                                        axis=1)
-                bh, bl, ih, il = _slo_step(scalars, occ, f_lp, f_hp,
+                bh, bl, ih, il = _slo_step(consts, occ, f_lp, f_hp,
                                            c["backlog_hp"], c["backlog_lp"],
                                            jnp)
                 imp = jnp.stack([ih, il], axis=1)  # [R, 2]
@@ -660,7 +756,11 @@ def _jax_runner(cfg: _JaxCfg):
                 c = dict(c, ring=ring, backlog_hp=bh, backlog_lp=bl,
                          imp=imp_buf, peak=jnp.maximum(c["peak"], frac),
                          fsum=c["fsum"] + frac)
-                ys = (fire, frac, rw) if cfg.keep_series else (fire,)
+                ys = ()
+                if cfg.keep_fire:
+                    ys += (fire,)
+                if cfg.keep_series:
+                    ys += (frac, rw)
                 return c, ys
             return step
 
@@ -679,93 +779,253 @@ def _jax_runner(cfg: _JaxCfg):
                 carry.update(hist_t=jnp.zeros((R, cfg.W)),
                              hist_p=jnp.zeros((R, cfg.W)))
             final, ys = lax.scan(step_for(occ60), carry, xs)
-            out = dict(fire=ys[0], nbr=final["nbr"], peak=final["peak"],
+            out = dict(nbr=final["nbr"], peak=final["peak"],
                        mean=final["fsum"] / T, imp=final["imp"])
+            i = 0
+            if cfg.keep_fire:
+                out["fire"] = ys[i]
+                i += 1
             if cfg.keep_series:
-                out.update(frac=ys[1], row_w=ys[2])
+                out["frac"] = ys[i]
+                out["row_w"] = ys[i + 1]
             return out
 
-        return jax.vmap(run_member)(occ60_all)
+        if cfg.chunk <= 0:
+            return jax.vmap(run_member)(occ60_all)
+        # bounded-memory tails: scan over member blocks so the in-flight
+        # working set is one block's state, not all N members' at once
+        N = occ60_all.shape[0]
+        blocked = occ60_all.reshape(
+            (N // cfg.chunk, cfg.chunk) + occ60_all.shape[1:])
+        _, outs = lax.scan(
+            lambda _, blk: (None, jax.vmap(run_member)(blk)), None, blocked)
+        return jax.tree_util.tree_map(
+            lambda a: a.reshape((N,) + a.shape[2:]), outs)
 
-    return jax.jit(run, static_argnums=(0,))
+    def run(occ60_g, consts_g, t_g, ii_g, iw_g, alive_g, bscale_g, ks):
+        _TRACE_EVENTS.append(cfg)
+
+        def scenario(occ60_all, consts, t, ii, iw, alive, bscale):
+            return run_scenario(occ60_all, consts,
+                                (ks, t, ii, iw, alive, bscale))
+
+        # scenario axis on top of the member axis: one program, M scenarios.
+        # t / ii / iw are geometry-determined (n_ticks, dt, n60 — all in
+        # _geometry_key), hence identical across the bucket: in_axes=None
+        # keeps the per-tick occ60 interpolation a dynamic-slice instead of
+        # an M-batched gather (~1.5x per-member cost on CPU at M=4).
+        return jax.vmap(scenario, in_axes=(0, 0, None, None, None, 0, 0))(
+            occ60_g, consts_g, t_g, ii_g, iw_g, alive_g, bscale_g)
+
+    fn = run
+    if mesh is not None:
+        # shard the member axis (dim 1 everywhere) over the mesh's "data"
+        # axis; constants/timelines replicate. Each device runs the whole
+        # scan on its member shard — no cross-device collectives in the hot
+        # loop, so throughput scales with device count.
+        from jax.sharding import PartitionSpec
+        from repro.launch.mesh import shard_map_compat
+        member = PartitionSpec(None, "data")
+        rep = PartitionSpec()
+        fn = shard_map_compat(
+            run, mesh=mesh,
+            in_specs=(member, rep, rep, rep, rep, rep, rep, rep),
+            out_specs=member, check_vma=False)
+    # donating the occupancy grid lets XLA reuse its buffer for outputs on
+    # accelerators; the CPU backend has no donation and would only warn
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(fn, donate_argnums=donate)
 
 
-def _run_jax(model: TickModel, keep_series: bool) -> BatchedRun:
+def _geometry_key(model: TickModel) -> tuple:
+    """The bucket key for grid lowering: two TickModels sharing this key
+    compile to the same XLA program (same ``_JaxCfg`` + operand shapes) and
+    can run stacked under the scenario-axis vmap."""
+    return (model.n_ticks, model.n_rows, model.ring_depth,
+            max(1, model.window), model.n_slots, model.stride,
+            model.oob_ticks, model.brake_ticks, model.escalation_ticks,
+            model.predictive, model.n_members, model.occ60.shape[2],
+            float(model.dt))
+
+
+def _run_jax_models(models: Sequence[TickModel], *, keep_series: bool,
+                    keep_fire: bool = True,
+                    member_chunk: Optional[int] = None,
+                    mesh=None) -> List[BatchedRun]:
+    """Run one geometry bucket of TickModels as a single device program.
+
+    Per-scenario constants stack on a leading ``[M]`` axis and the runner
+    vmaps the scenario axis over the member program — so an M-scenario grid
+    (or an M-probe planner sweep re-using one compiled program) costs one
+    dispatch, not M. ``member_chunk`` bounds device memory by scanning
+    member blocks; ``mesh`` shards the member axis over its "data" axis.
+    Members are padded (cyclically) to the chunk x device multiple and
+    sliced back — padding members are independent lanes, so results are
+    invariant to both knobs (tier-1 asserted)."""
     import jax.numpy as jnp
     from jax.experimental import enable_x64
 
-    cfg = _JaxCfg(T=model.n_ticks, R=model.n_rows, D=model.ring_depth,
-                  W=max(1, model.window), S=model.n_slots,
-                  stride=model.stride, oob_ticks=model.oob_ticks,
-                  brake_ticks=model.brake_ticks, esc=model.escalation_ticks,
-                  predictive=model.predictive, keep_series=keep_series)
-    runner = _jax_runner(cfg)
-    i_idx, i_w = _interp_weights(model)
+    m0 = models[0]
+    key0 = _geometry_key(m0)
+    for m in models[1:]:
+        if _geometry_key(m) != key0:
+            raise ValueError(
+                f"grid bucket mixes tick geometries: {_geometry_key(m)} vs "
+                f"{key0} (bucket specs with run_batched_grid)")
+    N = m0.n_members
+    n_dev = 1
+    if mesh is not None:
+        n_dev = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+        if n_dev <= 1:
+            mesh = None
+    if member_chunk is None:
+        # auto: cache-sized member blocks. The scan carry is ~2 KB/member,
+        # so a flat vmap over 10^3+ members thrashes L2 and per-member
+        # throughput drops ~40% (benchmarks/batched_engine.py measures the
+        # cliff); scanning blocks of ~_AUTO_CHUNK_MEMBERS members (counted
+        # across the whole scenario axis) keeps the live state
+        # cache-resident long before memory becomes the binding constraint.
+        # The block count is rounded so padding stays minimal.
+        if N * len(models) <= _AUTO_CHUNK_MEMBERS:
+            member_chunk = 0
+        else:
+            c0 = max(1, _AUTO_CHUNK_MEMBERS // len(models))
+            n_blocks = math.ceil(N / (max(1, n_dev) * c0))
+            member_chunk = math.ceil(N / (max(1, n_dev) * n_blocks))
+    chunk = max(0, int(member_chunk or 0))
+    mult = max(1, n_dev) * max(1, chunk)
+    n_pad = (-N) % mult
+    idx = np.resize(np.arange(N), N + n_pad)
+    cfg = _JaxCfg(T=m0.n_ticks, R=m0.n_rows, D=m0.ring_depth,
+                  W=max(1, m0.window), S=m0.n_slots, stride=m0.stride,
+                  oob_ticks=m0.oob_ticks, brake_ticks=m0.brake_ticks,
+                  esc=m0.escalation_ticks, predictive=m0.predictive,
+                  keep_series=keep_series, keep_fire=keep_fire, chunk=chunk)
+    runner = _jax_runner(cfg, mesh)
     with enable_x64():
-        consts = dict(
-            t1=jnp.asarray(model.t1), t2=jnp.asarray(model.t2),
-            t1_buf=jnp.asarray(model.t1_buffer),
-            t2_buf=jnp.asarray(model.t2_buffer),
-            lp_t1=jnp.asarray(model.lp_freq_t1),
-            lp_t2=jnp.asarray(model.lp_freq_t2),
-            hp_t2=jnp.asarray(model.hp_freq_t2),
-            brake_freq=jnp.asarray(model.brake_freq),
-            horizon=jnp.asarray(model.horizon_s),
-            total_budget=jnp.asarray(model.total_budget_w),
-            row_budget=jnp.asarray(model.row_budget_w),
-        )
-        xs = (jnp.arange(model.n_ticks, dtype=jnp.int32),
-              jnp.asarray(model.tick_times()),
-              jnp.asarray(i_idx, dtype=jnp.int32), jnp.asarray(i_w),
-              jnp.asarray(model.alive), jnp.asarray(model.budget_scale))
-        # the static arg: closed-form scalars only, hashable via the frozen
-        # dataclass minus its array fields
-        scalars = _ScalarModel.from_model(model)
-        out = runner(scalars, jnp.asarray(model.occ60), consts, xs)
-        fire = np.asarray(out["fire"])  # [N, T, R]
-        imp = np.asarray(out["imp"])  # [N, S, R, 2]
+        def _f(vals):
+            return jnp.asarray(np.asarray(vals, dtype=np.float64))
+
+        occ60_g = jnp.asarray(np.stack([m.occ60[idx] for m in models]))
+        consts_g = _Consts(
+            **{name: _f([_model_const(m, name) for m in models])
+               for name in _CONST_SCALARS},
+            row_budget=_f(np.stack([m.row_budget_w for m in models])))
+        # shared across the bucket by construction (geometry-keyed): pass
+        # unbatched so the runner's scenario vmap broadcasts them
+        i_idx, i_w = _interp_weights(m0)
+        t_g = _f(m0.tick_times())
+        ii_g = jnp.asarray(i_idx, dtype=jnp.int32)
+        iw_g = _f(i_w)
+        alive_g = _f(np.stack([m.alive for m in models]))
+        bscale_g = _f(np.stack([m.budget_scale for m in models]))
+        ks = jnp.arange(cfg.T, dtype=jnp.int32)
+        out = runner(occ60_g, consts_g, t_g, ii_g, iw_g, alive_g, bscale_g,
+                     ks)
+        out = {k: np.asarray(v) for k, v in out.items()}
+    runs: List[BatchedRun] = []
+    for i, m in enumerate(models):
+        sub = {k: v[i][:N] for k, v in out.items()}
+        imp = sub["imp"]  # [N, S, R, 2]
         run = BatchedRun(
-            engine="jax", model=model,
-            brake_fire=np.asarray(fire, dtype=bool),
-            n_brakes=np.asarray(out["nbr"], dtype=np.int64),
-            peak_frac=np.asarray(out["peak"], dtype=np.float64),
-            mean_frac=np.asarray(out["mean"], dtype=np.float64),
+            engine="jax", model=m,
+            brake_fire=(np.asarray(sub["fire"], dtype=bool)
+                        if keep_fire else None),
+            n_brakes=np.asarray(sub["nbr"], dtype=np.int64),
+            peak_frac=np.asarray(sub["peak"], dtype=np.float64),
+            mean_frac=np.asarray(sub["mean"], dtype=np.float64),
             impacts_hp=np.ascontiguousarray(imp[:, :, :, 0].transpose(0, 2, 1)),
             impacts_lp=np.ascontiguousarray(imp[:, :, :, 1].transpose(0, 2, 1)),
         )
         if keep_series:
-            run.total_frac = np.asarray(out["frac"], dtype=np.float64)
-            run.row_w = np.asarray(out["row_w"], dtype=np.float64)
-            if model.node_matrix is not None:
+            run.total_frac = np.asarray(sub["frac"], dtype=np.float64)
+            run.row_w = np.asarray(sub["row_w"], dtype=np.float64)
+            if m.node_matrix is not None:
                 run.node_w = np.einsum("ntr,mr->ntm", run.row_w,
-                                       model.node_matrix)
+                                       m.node_matrix)
+        runs.append(run)
+    return runs
+
+
+def _run_jax(model: TickModel, keep_series: bool, *, keep_fire: bool = True,
+             member_chunk: Optional[int] = None, mesh=None) -> BatchedRun:
+    return _run_jax_models([model], keep_series=keep_series,
+                           keep_fire=keep_fire, member_chunk=member_chunk,
+                           mesh=mesh)[0]
+
+
+# ---------------------------------------------------------------------------
+# pallas engine: the tick inner loop as a kernel (repro.kernels.tick)
+# ---------------------------------------------------------------------------
+
+def _run_pallas(model: TickModel, keep_series: bool) -> BatchedRun:
+    """Tick loop on the Pallas kernel backend (``repro.kernels.tick``).
+
+    The kernel owns what dominates the scan body — the power fold, the
+    latch update, and the actuation ring — per member block; occupancy
+    interpolation and the SLO fluid proxy run as numpy pre/post-passes
+    using the *same expressions* as the oracle (elementwise, so those
+    planes are bit-identical by construction and the differential gate
+    pins the kernel's brake sets / power series)."""
+    if model.predictive:
+        raise ValueError(
+            "engine='pallas' runs the non-predictive PolcaPolicy tick loop; "
+            f"{model.base_name!r} lowered a predictive policy (use "
+            "engine='jax', which carries the slope window in scan state)")
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.kernels import ops as kops
+    from repro.kernels.tick import TickConsts
+
+    N, R, T = model.n_members, model.n_rows, model.n_ticks
+    i_idx, i_w = _interp_weights(model)
+    # effective per-tick occupancy — the oracle's expression, vectorized
+    occ = ((model.occ60[:, :, i_idx] * (1.0 - i_w)
+            + model.occ60[:, :, i_idx + 1] * i_w)
+           * model.alive.T[None])  # [N, R, T]
+    occ_ntr = np.ascontiguousarray(occ.transpose(0, 2, 1))
+    consts = TickConsts(
+        t1=model.t1, t2=model.t2, t1_buf=model.t1_buffer,
+        t2_buf=model.t2_buffer, lp_t1=model.lp_freq_t1,
+        lp_t2=model.lp_freq_t2, hp_t2=model.hp_freq_t2,
+        brake_freq=model.brake_freq, p0_srv_w=model.p0_srv_w,
+        k_lp_w=model.k_lp_w, k_hp_w=model.k_hp_w, lp_share=model.lp_share,
+        gamma=model.gamma, n_servers=model.n_servers,
+        power_scale=model.power_scale)
+    with enable_x64():
+        out = kops.polca_tick(
+            jnp.asarray(occ_ntr), jnp.asarray(model.budget_scale),
+            jnp.asarray(model.row_budget_w), consts=consts,
+            oob_ticks=model.oob_ticks, brake_ticks=model.brake_ticks,
+            ring_depth=model.ring_depth, esc=model.escalation_ticks)
+        row_w = np.asarray(out["row_w"], dtype=np.float64)  # [N, T, R]
+        fire = np.asarray(out["fire"], dtype=bool)
+        f_lp = np.asarray(out["f_lp"], dtype=np.float64)
+        f_hp = np.asarray(out["f_hp"], dtype=np.float64)
+        nbr = np.asarray(out["n_brakes"], dtype=np.int64)
+    frac = row_w.sum(axis=2) / model.total_budget_w  # [N, T]
+    backlog_hp = np.zeros((N, R))
+    backlog_lp = np.zeros((N, R))
+    imp_hp = np.zeros((N, R, model.n_slots))
+    imp_lp = np.zeros((N, R, model.n_slots))
+    for k in range(T):
+        backlog_hp, backlog_lp, ih, il = _slo_step(
+            model, occ_ntr[:, k], f_lp[:, k], f_hp[:, k],
+            backlog_hp, backlog_lp, np)
+        if k % model.stride == 0:
+            imp_hp[:, :, k // model.stride] = ih
+            imp_lp[:, :, k // model.stride] = il
+    run = BatchedRun(
+        engine="pallas", model=model, brake_fire=fire, n_brakes=nbr,
+        peak_frac=frac.max(axis=1), mean_frac=frac.mean(axis=1),
+        impacts_hp=imp_hp, impacts_lp=imp_lp)
+    if keep_series:
+        run.total_frac = frac
+        run.row_w = row_w
+        if model.node_matrix is not None:
+            run.node_w = np.einsum("ntr,mr->ntm", row_w, model.node_matrix)
     return run
-
-
-@dataclass(frozen=True)
-class _ScalarModel:
-    """The closed-form scalar slice of a TickModel — hashable, so it can be
-    a static jit argument (the arrays travel as traced operands)."""
-    dt: float
-    p0_srv_w: float
-    k_lp_w: float
-    k_hp_w: float
-    lp_share: float
-    gamma: float
-    n_servers: int
-    power_scale: float
-    a_hp: float
-    a_lp: float
-    svc_hp: float
-    svc_lp: float
-
-    @classmethod
-    def from_model(cls, m: TickModel) -> "_ScalarModel":
-        return cls(dt=m.dt, p0_srv_w=m.p0_srv_w, k_lp_w=m.k_lp_w,
-                   k_hp_w=m.k_hp_w, lp_share=m.lp_share, gamma=m.gamma,
-                   n_servers=m.n_servers, power_scale=m.power_scale,
-                   a_hp=m.a_hp, a_lp=m.a_lp, svc_hp=m.svc_hp,
-                   svc_lp=m.svc_lp)
 
 
 # ---------------------------------------------------------------------------
@@ -773,27 +1033,84 @@ class _ScalarModel:
 # ---------------------------------------------------------------------------
 
 def run_tick_model(model: TickModel, members: List[Scenario], *,
-                   engine: str = "jax",
-                   keep_series: bool = True) -> BatchedRun:
+                   engine: str = "jax", keep_series: bool = True,
+                   keep_brake_fire: bool = True,
+                   member_chunk: Optional[int] = None,
+                   mesh=None) -> BatchedRun:
     """Run a lowered tick program on one backend. ``engine="numpy"`` is the
     oracle (real policy objects through Telemetry); ``engine="jax"`` the
-    vectorized device program. Differential tests run both and compare."""
+    vectorized device program; ``engine="pallas"`` the kernel backend
+    (non-predictive policies). Differential tests run oracle + device
+    backends on the same model and compare."""
     if engine == "numpy":
         return _run_oracle(model, members, keep_series)
     if engine == "jax":
-        return _run_jax(model, keep_series)
+        return _run_jax(model, keep_series, keep_fire=keep_brake_fire,
+                        member_chunk=member_chunk, mesh=mesh)
+    if engine == "pallas":
+        return _run_pallas(model, keep_series)
     raise ValueError(f"unknown batched engine {engine!r} "
-                     "(expected 'numpy' or 'jax')")
+                     "(expected 'numpy', 'jax', or 'pallas')")
+
+
+def run_tick_models(models: Sequence[TickModel], *,
+                    keep_series: bool = True, keep_brake_fire: bool = True,
+                    member_chunk: Optional[int] = None,
+                    mesh=None) -> List[BatchedRun]:
+    """Run a same-geometry bucket of lowered tick programs as ONE
+    scenario-vmapped jit call (DESIGN.md §16) and return one
+    :class:`BatchedRun` per model, in order.
+
+    This is the model-level grid entry — :func:`run_batched_grid` lowers
+    specs, buckets them by :func:`_geometry_key`, and lands here. It is
+    jax-engine only: the oracle and Pallas backends have no scenario axis
+    and run per model via :func:`run_tick_model`."""
+    return _run_jax_models(list(models), keep_series=keep_series,
+                           keep_fire=keep_brake_fire,
+                           member_chunk=member_chunk, mesh=mesh)
+
+
+# dense-tail cutover: above this member count run_batched_ensemble stops
+# materializing per-member python MemberStats/LatencyStats objects (O(N)
+# python floats) and returns the vectorized EnsembleResult arrays instead
+_MEMBER_STATS_LIMIT = 20_000
 
 
 def _to_ensemble_result(model: TickModel, members: List[Scenario],
-                        budget_w: float, run: BatchedRun) -> EnsembleResult:
+                        budget_w: float, run: BatchedRun,
+                        member_stats: bool = True) -> EnsembleResult:
     """Adapt a BatchedRun to the EnsembleResult shape the planner and the
     distributional statistics consume. ``power_frac`` rows are member
     total-budget fractions (the same quantity the DES engine stacks —
-    ``SimResult.power_w`` records the telemetry fraction series)."""
-    stats: List[MemberStats] = []
+    ``SimResult.power_w`` records the telemetry fraction series).
+
+    ``member_stats=False`` is the dense-tail mode: the members list stays
+    empty and per-member SLO impacts ride as ``[N, K]`` arrays — every
+    distributional statistic on EnsembleResult falls back to the
+    vectorized path (same numbers, no 10^5 python objects)."""
     t = model.tick_times()
+    if run.total_frac is not None:
+        power = np.asarray(run.total_frac)
+        power_t = t
+    else:
+        power = np.zeros((0, 0))
+        power_t = np.zeros(0)
+    common = dict(
+        base_name=model.base_name, budget_w=budget_w,
+        power_t=power_t, power_frac=power,
+        brake_counts=np.asarray(run.n_brakes.sum(axis=1)),
+        peak_fracs=np.asarray(run.peak_frac),
+        mean_fracs=np.asarray(run.mean_frac))
+    if not member_stats:
+        N = run.impacts_hp.shape[0]
+        return EnsembleResult(
+            members=[],
+            member_impacts_hp=(run.impacts_hp.reshape(N, -1)
+                               if model.has_hp else np.zeros((N, 0))),
+            member_impacts_lp=(run.impacts_lp.reshape(N, -1)
+                               if model.has_lp else np.zeros((N, 0))),
+            **common)
+    stats: List[MemberStats] = []
     for m, sc in enumerate(members):
         series = (run.total_frac[m] if run.total_frac is not None else None)
         res = SimResult(
@@ -805,38 +1122,109 @@ def _to_ensemble_result(model: TickModel, members: List[Scenario],
             power_t=(t if series is not None else None),
             power_w=series)
         stats.append(MemberStats(sc, res, res.latency))
-    if run.total_frac is not None:
-        power = np.asarray(run.total_frac)
-        power_t = t
-    else:
-        power = np.zeros((0, 0))
-        power_t = np.zeros(0)
-    return EnsembleResult(
-        base_name=model.base_name, budget_w=budget_w, members=stats,
-        power_t=power_t, power_frac=power,
-        brake_counts=np.asarray(run.n_brakes.sum(axis=1)),
-        peak_fracs=np.asarray(run.peak_frac),
-        mean_fracs=np.asarray(run.mean_frac))
+    return EnsembleResult(members=stats, **common)
+
+
+def _auto_flags(model: TickModel, keep_series: Optional[bool],
+                keep_brake_fire: Optional[bool],
+                member_stats: Optional[bool]) -> Tuple[bool, bool, bool]:
+    """Resolve the None-means-auto memory knobs from the model's size."""
+    cells = model.n_members * model.n_ticks
+    if keep_series is None:
+        keep_series = cells <= _SERIES_CELL_LIMIT
+    if keep_brake_fire is None:
+        # the bool [N, T, R] plane; 50x the f64 series budget in cells
+        keep_brake_fire = cells * model.n_rows <= 50 * _SERIES_CELL_LIMIT
+    if member_stats is None:
+        member_stats = model.n_members <= _MEMBER_STATS_LIMIT
+    return keep_series, keep_brake_fire, member_stats
 
 
 def run_batched_ensemble(spec: EnsembleSpec, *,
                          budget_w: Optional[float] = None,
                          engine: str = "jax",
-                         keep_series: Optional[bool] = None) -> EnsembleResult:
+                         keep_series: Optional[bool] = None,
+                         keep_brake_fire: Optional[bool] = None,
+                         member_stats: Optional[bool] = None,
+                         member_chunk: Optional[int] = None,
+                         mesh=None) -> EnsembleResult:
     """Evaluate an ensemble on the batched tick engine.
 
     The drop-in dense-tail counterpart of ``montecarlo.run_ensemble`` —
-    same EnsembleResult surface, 10^4+ members in one device program.
-    ``keep_series=None`` keeps per-tick power series while ``members x
-    ticks`` stays under 4e6 cells and drops them beyond (matching the DES
-    engine's ``record_power=False`` empty-matrix shape)."""
+    same EnsembleResult surface, 10^5+ members in one device program.
+    The ``None``-default knobs auto-scale with ensemble size (DESIGN.md
+    §16 memory budget): ``keep_series`` keeps per-tick power series under
+    4e6 member-tick cells; ``keep_brake_fire`` drops the [N, T, R] brake
+    plane (counts survive) past 2e8 cells; ``member_stats`` switches to
+    dense [N, K] impact arrays past 2e4 members. ``member_chunk`` scans
+    member blocks for bounded memory and cache residency (``None`` = auto:
+    ~512-member blocks once the run is big enough; ``0`` = flat vmap);
+    ``mesh`` shards the member axis over a "data" mesh axis
+    (``launch.mesh.data_mesh``)."""
     if engine == "batched-numpy":  # run_ensemble's name for the tick oracle
         engine = "numpy"
     with get_recorder().span("mc/run_batched", base=spec.base.name,
                              members=spec.n_seeds, engine=engine):
         model, members, budget = lower_ensemble(spec, budget_w=budget_w)
-        if keep_series is None:
-            keep_series = model.n_members * model.n_ticks <= _SERIES_CELL_LIMIT
+        keep_series, keep_fire, member_stats = _auto_flags(
+            model, keep_series, keep_brake_fire, member_stats)
         run = run_tick_model(model, members, engine=engine,
-                             keep_series=keep_series)
-        return _to_ensemble_result(model, members, budget, run)
+                             keep_series=keep_series,
+                             keep_brake_fire=keep_fire,
+                             member_chunk=member_chunk, mesh=mesh)
+        return _to_ensemble_result(model, members, budget, run,
+                                   member_stats=member_stats)
+
+
+def run_batched_grid(specs: Sequence[EnsembleSpec], *,
+                     budget_w: Optional[float] = None,
+                     engine: str = "jax",
+                     keep_series: Optional[bool] = None,
+                     keep_brake_fire: Optional[bool] = None,
+                     member_stats: Optional[bool] = None,
+                     member_chunk: Optional[int] = None,
+                     mesh=None) -> List[EnsembleResult]:
+    """Evaluate M ensembles as (at most a few) single device programs.
+
+    Specs are lowered individually (per-spec budget resolution unless
+    ``budget_w`` pins one envelope), bucketed by tick geometry
+    (:func:`_geometry_key`), and each bucket runs stacked under the
+    scenario-axis vmap — the mc-* scenario family (shared fleet/duration/
+    telemetry) is one bucket, so a 6-family CVaR frontier is one jit call.
+    Results come back in spec order, one EnsembleResult per spec.
+
+    ``engine="numpy"``/``"pallas"`` fall back to a per-scenario loop (the
+    oracle is the reference semantics; the kernel recompiles per scenario
+    by design) — the grid API stays engine-agnostic for differential
+    tests."""
+    if engine == "batched-numpy":
+        engine = "numpy"
+    lowered = [lower_ensemble(s, budget_w=budget_w) for s in specs]
+    with get_recorder().span("mc/run_grid", scenarios=len(specs),
+                             members=sum(m.n_members for m, _, _ in lowered),
+                             engine=engine):
+        runs: List[Optional[BatchedRun]] = [None] * len(lowered)
+        flags = [_auto_flags(m, keep_series, keep_brake_fire, member_stats)
+                 for m, _, _ in lowered]
+        if engine == "jax":
+            buckets: Dict[tuple, List[int]] = {}
+            for i, (m, _, _) in enumerate(lowered):
+                # keep_* flags join the key: they change the traced program
+                key = _geometry_key(m) + flags[i][:2]
+                buckets.setdefault(key, []).append(i)
+            for idxs in buckets.values():
+                ks, kf, _ = flags[idxs[0]]
+                bruns = _run_jax_models(
+                    [lowered[i][0] for i in idxs], keep_series=ks,
+                    keep_fire=kf, member_chunk=member_chunk, mesh=mesh)
+                for i, r in zip(idxs, bruns):
+                    runs[i] = r
+        else:
+            for i, (m, mem, _) in enumerate(lowered):
+                runs[i] = run_tick_model(m, mem, engine=engine,
+                                         keep_series=flags[i][0],
+                                         keep_brake_fire=flags[i][1])
+        return [_to_ensemble_result(m, mem, budget, run,
+                                    member_stats=flags[i][2])
+                for i, ((m, mem, budget), run) in enumerate(zip(lowered,
+                                                                runs))]

@@ -62,7 +62,13 @@ import numpy as np
 
 from repro.core.policy import NoCap
 from repro.core.simulator import RowSimulator, SimConfig, SimResult
-from repro.core.slo import SLO, LatencyStats, impact_vs_reference, meets_slo
+from repro.core.slo import (
+    DEFAULT_SLO,
+    SLO,
+    LatencyStats,
+    impact_vs_reference,
+    meets_slo,
+)
 from repro.experiments.runner import (
     ExperimentResult,
     build_workloads,
@@ -148,10 +154,40 @@ class EnsembleResult:
     brake_counts: np.ndarray = field(repr=False)  # [N]
     peak_fracs: np.ndarray = field(repr=False)  # [N]
     mean_fracs: np.ndarray = field(repr=False)  # [N]
+    # dense-tail mode (batched engine, ``member_stats=False``): ``members``
+    # stays empty and per-member SLO impact samples ride as [N, K] arrays —
+    # the statistics below fall back to vectorized paths over these, so a
+    # 10^5-member result carries no per-member python objects
+    member_impacts_hp: Optional[np.ndarray] = field(default=None, repr=False)
+    member_impacts_lp: Optional[np.ndarray] = field(default=None, repr=False)
 
     @property
     def n_members(self) -> int:
-        return len(self.members)
+        if self.members:
+            return len(self.members)
+        return int(len(self.brake_counts))
+
+    def _dense_impacts(self, priority: str) -> Optional[np.ndarray]:
+        """[N, K] impact samples in dense-tail mode, else None."""
+        if self.members:
+            return None
+        return (self.member_impacts_hp if priority == "high"
+                else self.member_impacts_lp)
+
+    def _member_percentiles(self, priority: str, q: float) -> np.ndarray:
+        """Per-member q-th percentile impact, [N] — member-object path and
+        dense path produce bit-identical values (same np.percentile on the
+        same samples; empty members are 0.0 like LatencyStats)."""
+        dense = self._dense_impacts(priority)
+        if dense is not None:
+            if dense.shape[1] == 0:
+                return np.zeros(dense.shape[0])
+            return np.percentile(dense, q, axis=1)
+        key = "hp_impacts" if priority == "high" else "lp_impacts"
+        return np.asarray([
+            float(np.percentile(np.asarray(getattr(m.stats, key)), q))
+            if len(getattr(m.stats, key)) else 0.0
+            for m in self.members])
 
     # -- powerbrake distribution -------------------------------------------
     def brake_prob(self, max_brakes: int = 0) -> float:
@@ -176,12 +212,8 @@ class EnsembleResult:
         Each member contributes one tail statistic (its own q-th percentile
         impact); CVaR then averages the worst ``(1 - alpha)`` of those —
         the dense-tail gate behind ``RiskConstraints.slo_cvar_alpha``."""
-        key = "hp_impacts" if priority == "high" else "lp_impacts"
-        per_member = np.asarray([
-            float(np.percentile(np.asarray(getattr(m.stats, key)), q))
-            if len(getattr(m.stats, key)) else 0.0
-            for m in self.members])
-        return _cvar(per_member, alpha)
+        return _cvar(np.asarray(self._member_percentiles(priority, q),
+                                float), alpha)
 
     # -- power distribution -------------------------------------------------
     def peak_exceedance(self, levels: Sequence[float]) -> np.ndarray:
@@ -201,6 +233,9 @@ class EnsembleResult:
     # -- SLO distribution ---------------------------------------------------
     def slo_impacts(self, priority: str) -> np.ndarray:
         """All per-request latency impacts of ``priority``, pooled."""
+        dense = self._dense_impacts(priority)
+        if dense is not None:
+            return dense.ravel() if dense.size else np.zeros(0)
         key = "hp_impacts" if priority == "high" else "lp_impacts"
         xs = [getattr(m.stats, key) for m in self.members]
         return np.concatenate([np.asarray(x) for x in xs]) if any(
@@ -210,13 +245,40 @@ class EnsembleResult:
         xs = self.slo_impacts(priority)
         return float(np.percentile(xs, q)) if len(xs) else 0.0
 
+    def _meets_mask(self, slo: SLO, include_brakes: bool) -> np.ndarray:
+        """[N] bool per-member SLO gate, vectorized over both storage modes
+        (same strict-< percentile comparisons as :func:`core.slo.meets_slo`)."""
+        ok = ((self._member_percentiles("high", 50) < slo.hp_p50)
+              & (self._member_percentiles("high", 99) < slo.hp_p99)
+              & (self._member_percentiles("low", 50) < slo.lp_p50)
+              & (self._member_percentiles("low", 99) < slo.lp_p99))
+        if include_brakes:
+            ok = ok & (np.asarray(self.brake_counts) <= slo.max_powerbrakes)
+        return ok
+
     def meets_fraction(self, slo: Optional[SLO] = None) -> float:
-        """Fraction of members meeting the SLO (per-member gate)."""
-        if slo is None:
-            return float(np.mean([m.meets for m in self.members]))
-        return float(np.mean([
-            meets_slo(m.stats, m.result.n_brakes, slo)
-            for m in self.members]))
+        """Fraction of members meeting the SLO (per-member gate). ``slo=None``
+        uses each member's own scenario SLO (dense-tail results, which carry
+        no scenarios, fall back to :data:`~repro.core.slo.DEFAULT_SLO`)."""
+        if self.members:
+            if slo is None:
+                return float(np.mean([m.meets for m in self.members]))
+            return float(np.mean([
+                meets_slo(m.stats, m.result.n_brakes, slo)
+                for m in self.members]))
+        if self.n_members == 0:
+            return float("nan")
+        return float(np.mean(self._meets_mask(slo or DEFAULT_SLO, True)))
+
+    def slo_violation_prob(self, slo: Optional[SLO] = None) -> float:
+        """P[member misses the SLO], powerbrakes *excluded* (the planner
+        constrains those separately via ``max_brake_prob``). Works in both
+        member-object and dense-tail modes — the vectorized percentile gate
+        is bit-identical to looping ``meets_slo(m.stats, 0, slo)``."""
+        if self.n_members == 0:
+            return 0.0
+        return float(1.0 - np.mean(self._meets_mask(slo or DEFAULT_SLO,
+                                                    False)))
 
     def summary(self) -> Dict[str, float]:
         """Headline distributional stats in one flat dict (benchmark rows)."""
@@ -471,7 +533,7 @@ def resolve_ensemble_budget(base: Scenario) -> float:
 
 
 def run_ensemble(spec: EnsembleSpec, *, budget_w: Optional[float] = None,
-                 engine: str = "numpy") -> EnsembleResult:
+                 engine: str = "numpy", **engine_opts) -> EnsembleResult:
     """Evaluate all members of ``spec`` in one batched pass.
 
     ``engine`` selects the execution backend:
@@ -480,19 +542,30 @@ def run_ensemble(spec: EnsembleSpec, *, budget_w: Optional[float] = None,
       reference semantics every other backend is differentially tested
       against;
     * ``"jax"`` — the jit/vmap/``lax.scan`` device program in
-      :mod:`repro.provisioning.batched` (DESIGN.md §15), a fluid tick-level
-      lowering that runs 10^4+ members in one call;
+      :mod:`repro.provisioning.batched` (DESIGN.md §15-16), a fluid
+      tick-level lowering that runs 10^5+ members in one call;
     * ``"batched-numpy"`` — the numpy tick-level oracle of that same
       lowering (drives the real policy objects), used by the parity
-      harness.
+      harness;
+    * ``"pallas"`` — the Pallas tick kernel backend
+      (:mod:`repro.kernels.tick`, non-predictive policies).
+
+    ``engine_opts`` forward to ``run_batched_ensemble`` (``member_chunk``,
+    ``mesh``, ``member_stats``, ``keep_series``, ``keep_brake_fire``);
+    they are meaningless for the event-driven engine and rejected there.
     """
-    if engine in ("jax", "batched-numpy"):
+    if engine in ("jax", "batched-numpy", "pallas"):
         from repro.provisioning.batched import run_batched_ensemble
-        return run_batched_ensemble(spec, budget_w=budget_w, engine=engine)
+        return run_batched_ensemble(spec, budget_w=budget_w, engine=engine,
+                                    **engine_opts)
     if engine != "numpy":
         raise ValueError(
             f"unknown ensemble engine {engine!r}; "
-            "expected 'numpy', 'jax', or 'batched-numpy'")
+            "expected 'numpy', 'jax', 'batched-numpy', or 'pallas'")
+    if engine_opts:
+        raise ValueError(
+            f"engine options {sorted(engine_opts)} only apply to the "
+            "batched engines, not engine='numpy'")
     with get_recorder().span("mc/run_ensemble", base=spec.base.name,
                              members=spec.n_seeds):
         budget = (resolve_ensemble_budget(spec.base) if budget_w is None
@@ -506,13 +579,36 @@ def run_ensemble(spec: EnsembleSpec, *, budget_w: Optional[float] = None,
 def run_ensemble_grid(bases: Sequence[Scenario], *, n_seeds: int = 8,
                       seed0: int = 1000, n_workers: Optional[int] = None,
                       budget_w: Optional[float] = None,
-                      lockstep_stride_s: float = 120.0) -> Dict[str, EnsembleResult]:
-    """N seeds x M scenarios in one batched pass: all M*N members are
-    flattened into a single work list, sharded across the pool together, and
-    re-grouped into one :class:`EnsembleResult` per base scenario."""
+                      lockstep_stride_s: float = 120.0,
+                      engine: str = "numpy",
+                      **engine_opts) -> Dict[str, EnsembleResult]:
+    """N seeds x M scenarios in one batched pass.
+
+    ``engine="numpy"`` (default) flattens all M*N members into a single
+    work list, shards it across the fork pool together, and re-groups into
+    one :class:`EnsembleResult` per base scenario. The batched engines
+    (``"jax"``/``"batched-numpy"``/``"pallas"``) dispatch to
+    :func:`repro.provisioning.batched.run_batched_grid`, which buckets
+    scenarios by tick geometry and runs each bucket as ONE scenario-axis
+    vmapped device program — an M-family CVaR frontier is a single jit
+    call (DESIGN.md §16). ``engine_opts`` forward there (``member_chunk``,
+    ``mesh``, ``member_stats``, ...)."""
     specs = [EnsembleSpec(b, n_seeds=n_seeds, seed0=seed0,
                           n_workers=n_workers,
                           lockstep_stride_s=lockstep_stride_s) for b in bases]
+    if engine in ("jax", "batched-numpy", "pallas"):
+        from repro.provisioning.batched import run_batched_grid
+        results = run_batched_grid(specs, budget_w=budget_w, engine=engine,
+                                   **engine_opts)
+        return {s.base.name: r for s, r in zip(specs, results)}
+    if engine != "numpy":
+        raise ValueError(
+            f"unknown ensemble engine {engine!r}; "
+            "expected 'numpy', 'jax', 'batched-numpy', or 'pallas'")
+    if engine_opts:
+        raise ValueError(
+            f"engine options {sorted(engine_opts)} only apply to the "
+            "batched engines, not engine='numpy'")
     budgets = [resolve_ensemble_budget(s.base) if budget_w is None
                else float(budget_w) for s in specs]
     member_lists = [s.member_scenarios(bw) for s, bw in zip(specs, budgets)]

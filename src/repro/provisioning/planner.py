@@ -37,7 +37,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 from repro.chaos.faults import FaultSpec
-from repro.core.slo import DEFAULT_SLO, SLO, meets_slo
+from repro.core.slo import DEFAULT_SLO, SLO
 from repro.experiments.scenario import Scenario
 from repro.obs.metrics import get_recorder
 from repro.provisioning.montecarlo import (
@@ -138,9 +138,10 @@ class PlanResult:
 
 def _violation_prob(ens: EnsembleResult, slo: SLO) -> float:
     """P[member misses the SLO], powerbrakes excluded (they are constrained
-    separately by ``max_brake_prob``)."""
-    misses = [not meets_slo(m.stats, 0, slo) for m in ens.members]
-    return float(sum(misses)) / max(1, len(misses))
+    separately by ``max_brake_prob``). Delegates to the EnsembleResult so
+    dense-tail results (``member_stats=False``, no per-member python
+    objects) gate identically to member-object ones."""
+    return ens.slo_violation_prob(slo)
 
 
 def plan_capacity(base: Scenario, *,
@@ -150,7 +151,7 @@ def plan_capacity(base: Scenario, *,
                   budget_w: Optional[float] = None,
                   n_workers: Optional[int] = None,
                   keep_ensembles: bool = False,
-                  engine: str = "numpy") -> PlanResult:
+                  engine: str = "numpy", **engine_opts) -> PlanResult:
     """Maximum deployable fleet for ``base``'s traffic family under
     ``constraints``.
 
@@ -162,7 +163,15 @@ def plan_capacity(base: Scenario, *,
 
     ``engine`` selects the ensemble backend per :func:`run_ensemble` —
     ``"jax"`` is the dense-tail mode that makes 10^3+-seed probes (and so
-    the CVaR gate) affordable. ``constraints.survive`` requires the
+    the CVaR gate) affordable. On that engine the probe loop compiles ONE
+    device program for the whole bisection: per-scenario scalars
+    (``n_servers``, thresholds, budgets) are traced operands, so probes
+    differing only in fleet size / pinned budget hit the jit cache
+    (regression-asserted via ``batched.jax_trace_count`` in
+    ``tests/test_grid_engine.py``), and the base occupancy curves are
+    cached across probes (only the fleet-scaled CLT jitter is recomputed).
+    ``engine_opts`` forward to :func:`run_ensemble` (``member_chunk``,
+    ``mesh``, ``member_stats``, ...). ``constraints.survive`` requires the
     event-driven ``"numpy"`` engine (the chaos injector rides the
     FleetSimulator, which the tick lowering rejects).
     """
@@ -199,7 +208,7 @@ def plan_capacity(base: Scenario, *,
             ens = run_ensemble(EnsembleSpec(sc, n_seeds=n_seeds, seed0=seed0,
                                             n_workers=n_workers,
                                             with_reference=True),
-                               budget_w=budget, engine=engine)
+                               budget_w=budget, engine=engine, **engine_opts)
             brake_p = ens.brake_prob(constraints.max_brakes)
             slo_p = _violation_prob(ens, constraints.slo)
             cvar: Optional[float] = None

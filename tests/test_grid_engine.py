@@ -1,0 +1,168 @@
+"""Grid-engine semantics (DESIGN.md §16): scenario-axis vmap, member
+chunking, device sharding, dense-tail statistics, and compile-count reuse.
+
+The contract under test is *bit*-identity, not closeness: the grid program,
+the chunked program, and the sharded program are the same computation graph
+over the same float64 operands, so XLA must produce identical bits — any
+drift means the lowering changed the math, exactly what these properties
+exist to catch.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import (
+    PARITY_GENERATORS,
+    assert_engine_parity,
+    parity_scenario,
+)
+from repro.launch.mesh import data_mesh
+from repro.provisioning.batched import (
+    jax_trace_count,
+    lower_ensemble,
+    run_batched_ensemble,
+    run_batched_grid,
+    run_tick_model,
+)
+from repro.provisioning.montecarlo import (
+    EnsembleSpec,
+    run_ensemble,
+    run_ensemble_grid,
+)
+from repro.provisioning.planner import plan_capacity
+
+GRID_GENERATORS = ("diurnal", "bursty", "colocated", "nighttime")
+
+
+def _grid_specs(n_seeds=4):
+    return [EnsembleSpec(parity_scenario(generator=g), n_seeds=n_seeds)
+            for g in GRID_GENERATORS]
+
+
+def _assert_results_identical(a, b):
+    assert a.base_name == b.base_name
+    np.testing.assert_array_equal(a.brake_counts, b.brake_counts)
+    np.testing.assert_array_equal(a.peak_fracs, b.peak_fracs)
+    np.testing.assert_array_equal(a.mean_fracs, b.mean_fracs)
+    np.testing.assert_array_equal(a.power_frac, b.power_frac)
+
+
+def test_grid_bit_identical_to_per_scenario_loop_and_one_trace():
+    """M scenarios sharing tick geometry: one vmapped program, results
+    bit-identical to M independent run_ensemble calls."""
+    specs = _grid_specs()
+    t0 = jax_trace_count()
+    grid = run_batched_grid(specs, engine="jax")
+    assert jax_trace_count() - t0 == 1, (
+        "a same-geometry grid must lower to ONE traced program")
+    loop = [run_ensemble(s, engine="jax") for s in specs]
+    for g, l in zip(grid, loop):
+        _assert_results_identical(g, l)
+
+
+def test_run_ensemble_grid_jax_dispatch():
+    """montecarlo.run_ensemble_grid(engine='jax') routes to the batched grid
+    and keys results by base name, same numbers as run_ensemble."""
+    bases = [parity_scenario(generator=g) for g in GRID_GENERATORS[:2]]
+    out = run_ensemble_grid(bases, n_seeds=3, engine="jax")
+    assert set(out) == {b.name for b in bases}
+    for b in bases:
+        single = run_ensemble(EnsembleSpec(b, n_seeds=3), engine="jax")
+        _assert_results_identical(out[b.name], single)
+
+
+@pytest.mark.parametrize("chunk", [3, 5, 12])
+def test_member_chunk_invariance(chunk):
+    """Chunked lax.scan over member blocks (including a non-dividing chunk,
+    which pads with cyclic members and slices back) is bit-identical to the
+    flat vmap."""
+    spec = EnsembleSpec(parity_scenario(generator="bursty"), n_seeds=12)
+    flat = run_ensemble(spec, engine="jax")
+    chunked = run_ensemble(spec, engine="jax", member_chunk=chunk)
+    _assert_results_identical(flat, chunked)
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 8])
+def test_device_count_invariance(n_dev):
+    """shard_map over the forced host-CPU 'data' axis: 1 vs N devices give
+    identical bits (the member axis is embarrassingly parallel)."""
+    spec = EnsembleSpec(parity_scenario(generator="diurnal"), n_seeds=8)
+    base = run_ensemble(spec, engine="jax")
+    sharded = run_ensemble(spec, engine="jax", mesh=data_mesh(n_dev))
+    _assert_results_identical(base, sharded)
+
+
+def test_sharded_and_chunked_compose():
+    spec = EnsembleSpec(parity_scenario(generator="colocated"), n_seeds=10)
+    base = run_ensemble(spec, engine="jax")
+    both = run_ensemble(spec, engine="jax", mesh=data_mesh(4), member_chunk=2)
+    _assert_results_identical(base, both)
+
+
+def test_plan_capacity_probe_count_does_not_multiply_compiles():
+    """Satellite-6 regression: per-scenario scalars are traced operands, so
+    a whole bisection (fleet size varies, budget pinned) compiles once."""
+    sc = parity_scenario(generator="diurnal")
+    t0 = jax_trace_count()
+    plan = plan_capacity(sc, n_seeds=4, engine="jax")
+    assert len(plan.probes) >= 3, "bisection too shallow to regression-test"
+    assert jax_trace_count() - t0 <= 1, (
+        f"{len(plan.probes)} probes retraced the engine "
+        f"{jax_trace_count() - t0} times; scalar consts leaked back into "
+        "the jit cache key")
+
+
+@pytest.mark.parametrize("generator", PARITY_GENERATORS)
+def test_pallas_engine_parity(generator):
+    """The Pallas tick kernel backend satisfies the same oracle contract as
+    the scan engine: brake sets bit-identical, power within 1e-6 relative."""
+    model, members, _ = lower_ensemble(
+        EnsembleSpec(parity_scenario(generator=generator), n_seeds=3))
+    oracle = run_tick_model(model, members, engine="numpy")
+    pallas = run_tick_model(model, members, engine="pallas")
+    assert pallas.engine == "pallas"
+    assert_engine_parity(oracle, pallas)
+
+
+def test_pallas_rejects_predictive():
+    model, members, _ = lower_ensemble(EnsembleSpec(
+        parity_scenario(policy="polca-predictive"), n_seeds=2))
+    with pytest.raises(ValueError, match="predictive"):
+        run_tick_model(model, members, engine="pallas")
+
+
+def test_dense_member_stats_equivalent():
+    """member_stats=False drops the per-member python objects but every
+    distributional statistic must return the same numbers."""
+    spec = EnsembleSpec(parity_scenario(generator="bursty"), n_seeds=12)
+    rich = run_batched_ensemble(spec, engine="jax", member_stats=True)
+    dense = run_batched_ensemble(spec, engine="jax", member_stats=False)
+    assert rich.n_members == dense.n_members == 12
+    assert len(dense.members) == 0 and dense.member_impacts_hp is not None
+    for prio in ("high", "low"):
+        np.testing.assert_array_equal(rich.slo_impacts(prio),
+                                      dense.slo_impacts(prio))
+        for q in (50.0, 99.0):
+            assert rich.slo_percentile(prio, q) == dense.slo_percentile(prio, q)
+        for alpha in (0.0, 0.5, 0.9):
+            assert rich.slo_cvar(prio, alpha) == dense.slo_cvar(prio, alpha)
+    assert rich.meets_fraction() == dense.meets_fraction()
+    assert rich.slo_violation_prob() == dense.slo_violation_prob()
+    assert rich.summary() == dense.summary()
+
+
+def test_keep_brake_fire_false_drops_plane_keeps_counts():
+    spec = EnsembleSpec(parity_scenario(generator="diurnal"), n_seeds=3)
+    model, members, _ = lower_ensemble(spec)
+    full = run_tick_model(model, members, engine="jax")
+    lean = run_tick_model(model, members, engine="jax", keep_brake_fire=False)
+    assert lean.brake_fire is None
+    np.testing.assert_array_equal(full.n_brakes, lean.n_brakes)
+    with pytest.raises(ValueError, match="keep_brake_fire"):
+        lean.brake_ticks()
+
+
+def test_engine_opts_rejected_on_event_driven_engine():
+    spec = EnsembleSpec(parity_scenario(generator="diurnal"), n_seeds=2)
+    with pytest.raises(ValueError, match="engine options"):
+        run_ensemble(spec, engine="numpy", member_chunk=4)

@@ -35,12 +35,16 @@ python -m benchmarks.run --quick --only observability
 echo "== alerting quick benchmark =="
 python -m benchmarks.run --quick --only alerting
 
-echo "== batched-engine quick benchmark (oracle parity + 10^4-member tail) =="
-python -m benchmarks.run --quick --only batched_engine
-
-echo "== artifact pipeline (instrumented run -> manifest/metrics/events/incidents/report) =="
+echo "== batched-engine quick benchmark (grid engine + kernel parity + tails) =="
+# forced host devices exercise the sharded member axis; the grid rows record
+# members/sec trajectory into BENCH_batched_engine.json via --artifacts below
 ARTIFACTS_DIR="${ARTIFACTS_DIR:-out/smoke-artifacts}"
 rm -rf "$ARTIFACTS_DIR"
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m benchmarks.run --quick --only batched_engine \
+    --artifacts "$ARTIFACTS_DIR"
+
+echo "== artifact pipeline (instrumented run -> manifest/metrics/events/incidents/report) =="
 python -m benchmarks.run --quick --only table2,alerting --artifacts "$ARTIFACTS_DIR"
 python tools/incidents.py "$ARTIFACTS_DIR" > /dev/null
 python - "$ARTIFACTS_DIR" <<'EOF'
